@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: timing, matrix synthesis, CSV output."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# Bench matrix size knob (CPU wall-clock runs); full paper sizes are used
+# for flop models only.
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", "768"))
+REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "3"))
+
+_rows: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def all_rows():
+    return list(_rows)
+
+
+def time_fn(fn, *args, repeats: int = None, warmup: int = 1):
+    """Median wall-clock seconds of fn(*args) (blocks on jax arrays)."""
+    repeats = repeats or REPEATS
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def make_matrix(n: int, kappa: float, m: int = None, seed: int = 0,
+                dtype=jnp.float64):
+    rng = np.random.default_rng(seed)
+    m = m or n
+    k = min(m, n)
+    u, _ = np.linalg.qr(rng.standard_normal((m, k)))
+    v, _ = np.linalg.qr(rng.standard_normal((n, k)))
+    s = np.geomspace(1.0, 1.0 / kappa, k)
+    return jnp.asarray((u * s) @ v.T, dtype=dtype)

@@ -1,0 +1,68 @@
+"""Paper Table 1 (theory) and Tables 5/10 (measured iteration counts)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+import repro.core as C
+from repro.core import coeffs as CF
+
+from benchmarks.common import BENCH_N, emit, make_matrix, time_fn
+
+KAPPAS_T1 = [1.001, 1.01, 1.1, 1.2, 1.5, 2, 10, 1e2, 1e3, 1e5, 1e7, 1e16]
+PAPER_T1 = {
+    1: [2, 2, 2, 3, 3, 3, 4, 4, 4, 5, 5, 6],
+    2: [1, 2, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4],
+    3: [1, 1, 2, 2, 2, 2, 2, 2, 3, 3, 3, 3],
+    4: [1, 1, 1, 2, 2, 2, 2, 2, 2, 3, 3, 3],
+    5: [1, 1, 1, 1, 2, 2, 2, 2, 2, 2, 3, 3],
+    6: [1, 1, 1, 1, 1, 2, 2, 2, 2, 2, 2, 3],
+    7: [1, 1, 1, 1, 1, 1, 2, 2, 2, 2, 2, 3],
+    8: [1, 1, 1, 1, 1, 1, 2, 2, 2, 2, 2, 2],
+}
+
+# paper Table 5 (measured) for the Example-1 matrices, and Table 10 rows
+PAPER_T5 = {"nemeth03": (1.29, {2: 3, 3: 3, 4: 3}),
+            "fv1": (1.40e1, {2: 4, 3: 3, 4: 3}),
+            "linverse": (9.06e3, {2: 4, 3: 3, 4: 3})}
+PAPER_T10 = {"bcsstk18": (3.46e11, {2: 4, 3: 4, 4: 3, 5: 3}),
+             "c-47": (3.16e8, {2: 4, 3: 4, 4: 3, 5: 3}),
+             "rand1": (3.97e7, {2: 4, 3: 4, 4: 3, 5: 3})}
+
+
+def table1():
+    """Regenerate Table 1 from the scalar Zolotarev recursion."""
+    mismatch = 0
+    for r, row in PAPER_T1.items():
+        ours = [CF.zolo_iter_count(k, r) for k in KAPPAS_T1]
+        mismatch += sum(1 for a, b in zip(ours, row) if a != b)
+    emit("table1.cells_matching_paper", 0.0, f"{96 - mismatch}/96")
+    # the one borderline cell (r=7, kappa=2) achieves 1.22e-15 vs the
+    # 1e-15 band; it matches at tol 1.3e-15
+    emit("table1.cells_matching_at_1.3e-15", 0.0,
+         f"{sum(1 for r, row in PAPER_T1.items() for k, b in zip(KAPPAS_T1, row) if CF.zolo_iter_count(k, r, tol=1.3e-15) == b)}/96")
+    emit("table1.qdwh_iters_kappa_1e16", 0.0, str(CF.qdwh_iter_count(1e16)))
+
+
+def tables5_10():
+    """Measured matrix iteration counts vs the paper's measured tables."""
+    n = min(BENCH_N, 512)
+    for table, entries in (("table5", PAPER_T5), ("table10", PAPER_T10)):
+        agree = total = 0
+        for name, (kappa, by_r) in entries.items():
+            a = make_matrix(n, kappa, m=n, seed=3)
+            for r, paper_iters in by_r.items():
+                _, _, info = C.zolo_pd(a, r=r, alpha=1.0, l=0.9 / kappa,
+                                       want_h=False)
+                ours = int(info.iterations)
+                total += 1
+                agree += int(abs(ours - paper_iters) <= 1)
+                emit(f"{table}.{name}.r{r}.iters", 0.0,
+                     f"ours={ours};paper={paper_iters}")
+        emit(f"{table}.within_one_of_paper", 0.0, f"{agree}/{total}")
+
+
+def run():
+    table1()
+    tables5_10()

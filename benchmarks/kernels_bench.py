@@ -1,0 +1,73 @@
+"""Pallas kernel parity (interpret mode vs jnp oracle, flop accounting).
+
+Wall-clock in interpret mode is meaningless (Python-executed kernel body);
+the reported numbers are oracle wall-clock + the VMEM working-set model of
+the chosen BlockSpecs — the structural facts that transfer to TPU.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from repro.kernels import ops, ref
+from benchmarks.common import BENCH_N, emit, time_fn
+
+
+def vmem_working_set(bn, bk, bm=None, dtype_bytes=4):
+    """Bytes resident in VMEM for one grid step of the gram kernel."""
+    a_tiles = 2 * bk * bn * dtype_bytes
+    out_tile = bn * bn * 4
+    return a_tiles + out_tile
+
+
+def run():
+    n = min(BENCH_N, 512)
+    m = 2 * n
+    rng = np.random.default_rng(0)
+    a32 = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+
+    t_ref = time_fn(jax.jit(lambda a: ref.gram_ref(a, 0.5)), a32)
+    emit("kernels.gram.oracle", t_ref * 1e6,
+         f"flops={2 * m * n * n:.2e}")
+    g_k = ops.gram(a32, 0.5)
+    g_r = ref.gram_ref(a32, 0.5)
+    emit("kernels.gram.max_err_vs_oracle", 0.0,
+         f"{float(jnp.abs(g_k - g_r).max()):.2e}")
+    ws = vmem_working_set(256, 512)
+    emit("kernels.gram.vmem_working_set", 0.0,
+         f"{ws / 1e6:.2f}MB_of_128MB_vmem_v5e")
+
+    r = 3
+    t = jnp.asarray(rng.standard_normal((r, m, n)), jnp.float32)
+    avec = jnp.asarray(rng.standard_normal(r), jnp.float32)
+    o_k = ops.polar_update(a32, t, avec, 0.99)
+    o_r = ref.polar_update_ref(a32, t, avec, 0.99)
+    emit("kernels.polar_update.max_err", 0.0,
+         f"{float(jnp.abs(o_k - o_r).max()):.2e}")
+    # HBM traffic saving of the fusion: naive chaining reads/writes the
+    # (m, n) array 2r+2 times; fused reads r+1, writes 1.
+    naive = (2 * r + 2) * m * n * 4
+    fused = (r + 2) * m * n * 4
+    emit("kernels.polar_update.hbm_traffic_saving", 0.0,
+         f"{naive / fused:.2f}x")
+    flash_bench()
+
+
+def flash_bench():
+    """Flash-attention kernel parity + VMEM model (appended to run())."""
+    rng = np.random.default_rng(1)
+    b, s, h, d = 2, 256, 4, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    got = ops.flash_attention(q, k, v, bq=128, bk=128)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    emit("kernels.flash_attention.max_err", 0.0,
+         f"{float(jnp.abs(got - jnp.asarray(want, jnp.float32)).max()):.2e}")
+    # VMEM per grid step: q,k,v tiles + f32 state
+    bq = bk = 128
+    ws = (bq * d + 2 * bk * d) * 4 + (2 * bq + bq * d) * 4
+    emit("kernels.flash_attention.vmem_working_set", 0.0,
+         f"{ws / 1e6:.2f}MB_of_128MB_vmem_v5e")

@@ -1,0 +1,227 @@
+"""§Roofline builder: dry-run JSONs -> per-cell roofline terms.
+
+Hardware model (TPU v5e, per the brief):
+    peak bf16 compute   197 TFLOP/s / chip
+    HBM bandwidth       819 GB/s  / chip
+    ICI link bandwidth  ~50 GB/s / link
+
+Terms (per device = per chip; cost_analysis is per-partition):
+    compute_s    = HLO_flops / 197e12
+    memory_s     = HLO_bytes_accessed / 819e9
+    collective_s = wire_bytes / 50e9     (ring-cost estimate per device)
+
+MODEL_FLOPS is the analytic useful work: 6*N*D for dense training
+(2*N*D serving), with N the matmul-visible active params (MoE experts
+scaled by top_k/E) plus the attention O(S^2) term.  The ratio
+MODEL_FLOPS / HLO_FLOPS exposes remat/dispatch/redundancy overheads.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+from repro import configs as CFG
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def matmul_params(cfg) -> float:
+    """Active matmul-visible params (excl. embedding gather; incl. head)."""
+    d = cfg.d_model
+    per_layer = {}
+    n_attn = 0.0
+    if "attn" in cfg.block_pattern:
+        n_attn = d * cfg.q_dim * 2 + d * cfg.kv_dim * 2
+    n_mlp = 0.0
+    if cfg.mlp_type == "swiglu":
+        n_mlp = 3 * d * cfg.d_ff
+    elif cfg.mlp_type == "gelu":
+        n_mlp = 2 * d * cfg.d_ff
+    if cfg.num_experts:
+        n_mlp = n_mlp * cfg.moe_top_k  # active experts only
+        n_mlp += d * cfg.num_experts  # router
+    n_ssd = 0.0
+    if "ssd" in cfg.block_pattern:
+        di, ns, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        n_ssd = d * (2 * di + 2 * ns + h) + di * d
+    n_rglru = 0.0
+    if "rglru" in cfg.block_pattern:
+        dr = cfg.rnn_width
+        n_rglru = 2 * d * dr + 2 * dr * dr + dr * d
+
+    pat = cfg.block_pattern
+    counts = {k: (list(pat).count(k) * cfg.num_stages
+                  + list(cfg.remainder_blocks).count(k))
+              for k in ("attn", "ssd", "rglru")}
+    total = counts["attn"] * (n_attn + n_mlp) \
+        + counts["ssd"] * n_ssd \
+        + counts["rglru"] * (n_rglru + n_mlp)
+    total += d * cfg.vocab_padded  # lm head (tied or not, the matmul runs)
+    return float(total)
+
+
+def attention_flops(cfg, shape) -> float:
+    """O(S^2) attention matmul flops (fwd), full batch."""
+    if "attn" not in cfg.block_pattern:
+        return 0.0
+    n_attn_layers = (list(cfg.block_pattern).count("attn") * cfg.num_stages
+                     + list(cfg.remainder_blocks).count("attn"))
+    s = shape.seq_len
+    if shape.kind == "decode":
+        ctx = min(s, cfg.window) if cfg.window else s
+        per = 4.0 * ctx * cfg.q_dim  # qk + pv for one new token
+        return n_attn_layers * shape.global_batch * per
+    window = min(s, cfg.window) if cfg.window else s
+    per_tok = 4.0 * (window / 2 if window == s else window) * cfg.q_dim
+    return n_attn_layers * shape.global_batch * s * per_tok
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = CFG.get_config(arch)
+    shape = SHAPES[shape_name]
+    n = matmul_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens + 3.0 * attention_flops(cfg, shape)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens + attention_flops(cfg, shape)
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch + attention_flops(cfg, shape)
+
+
+def load_cells(dryrun_dir: str):
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def analyze_cell(rec: dict) -> Optional[dict]:
+    if rec.get("status") == "skip":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "skip": True}
+    if rec.get("status") != "ok":
+        return None
+    chips = rec.get("devices", 256)
+    # Two cost readings, each a *lower bound* with a different failure
+    # mode: the raw full-lowering cost undercounts any loop XLA kept as a
+    # while (e.g. the decode stage scan is costed once), while the 1/2-
+    # stage extrapolation undercounts ceil-padded batched work (e.g. the
+    # Muon stack sharded over 256 ways).  Take the max of the two.
+    ce = rec.get("cost_extrapolated") or {}
+    raw = rec.get("cost", {})
+    flops = max(ce.get("flops") or 0.0, raw.get("flops") or 0.0)
+    bytes_acc = max(ce.get("bytes") or 0.0,
+                    raw.get("bytes accessed") or 0.0)
+    coll_e = ce.get("collectives") or {}
+    coll_r = rec.get("collectives") or {}
+    wire = max(coll_e.get("total_wire_bytes") or 0.0,
+               coll_r.get("total_wire_bytes")
+               or coll_r.get("total_bytes") or 0.0)
+    coll = coll_e if (coll_e.get("total_wire_bytes") or 0.0) >= \
+        (coll_r.get("total_wire_bytes") or 0.0) else coll_r
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = wire / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_per_chip = mf / chips
+    useful_ratio = mf_per_chip / flops if flops else 0.0
+    # roofline fraction: useful flops per chip / (peak * bound time)
+    frac = mf_per_chip / (PEAK_FLOPS * bound_s) if bound_s else 0.0
+    # fraction > 1 is impossible on real hardware: it means both cost
+    # readings undercount (e.g. a retained scan); flag instead of report
+    undercount = frac > 1.0 or useful_ratio > 10.0
+    mem = rec.get("memory", {})
+    hbm = (mem.get("temp_size_in_bytes", 0)
+           + mem.get("argument_size_in_bytes", 0))
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops_total": mf, "hlo_flops_per_chip": flops,
+        "useful_ratio": useful_ratio, "roofline_fraction": frac,
+        "undercount_flag": undercount,
+        "hbm_bytes": hbm, "fits_hbm": hbm <= HBM_PER_CHIP,
+        "collectives_by_kind": {
+            k: v for k, v in coll.items()
+            if isinstance(v, dict) and v.get("wire_bytes", v.get("bytes", 0))
+        },
+        "skip": False,
+    }
+
+
+def build_table(dryrun_dir: str = "experiments/dryrun",
+                mesh: str = "16x16"):
+    rows = []
+    for rec in load_cells(dryrun_dir):
+        if rec.get("mesh") != mesh:
+            continue
+        a = analyze_cell(rec)
+        if a:
+            rows.append(a)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | useful (6ND/HLO) | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    body = []
+    for r in rows:
+        if r.get("skip"):
+            body.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"SKIP(full-attn) | — | — |")
+            continue
+        frac = (f"{r['roofline_fraction']:.3f}"
+                if not r.get("undercount_flag")
+                else "n/a (HLO undercount)")
+        body.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | {frac} |")
+    return hdr + "\n".join(body) + "\n"
+
+
+def run():
+    from benchmarks.common import emit
+    rows = build_table()
+    ok = [r for r in rows if not r.get("skip")
+          and not r.get("undercount_flag")]
+    if not ok:
+        emit("roofline.cells", 0.0, "no dry-run data yet")
+        return
+    emit("roofline.cells_analyzed", 0.0, str(len(ok)))
+    worst = min(ok, key=lambda r: r["roofline_fraction"])
+    best = max(ok, key=lambda r: r["roofline_fraction"])
+    emit("roofline.worst_cell", 0.0,
+         f"{worst['arch']}/{worst['shape']}={worst['roofline_fraction']:.3f}")
+    emit("roofline.best_cell", 0.0,
+         f"{best['arch']}/{best['shape']}={best['roofline_fraction']:.3f}")
+    by_dom = {}
+    for r in ok:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    emit("roofline.dominant_histogram", 0.0,
+         ";".join(f"{k}={v}" for k, v in sorted(by_dom.items())))
+
+
+if __name__ == "__main__":
+    import sys
+    rows = build_table(sys.argv[1] if len(sys.argv) > 1
+                       else "experiments/dryrun")
+    print(markdown_table(rows))

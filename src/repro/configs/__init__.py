@@ -1,0 +1,9 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+
+from repro.configs.registry import (
+    ARCHS,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    list_archs,
+)

@@ -1,0 +1,80 @@
+"""--arch registry: config lookup + per-(arch x shape) input specs."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+ARCHS = {
+    "musicgen-large": "repro.configs.musicgen_large",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "yi-34b": "repro.configs.yi_34b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    return importlib.import_module(ARCHS[arch])
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if (arch x shape) is runnable, else the skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "SKIP(full-attn): long_500k needs sub-quadratic attention"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                abstract: bool = True, seed: int = 0) -> Dict[str, object]:
+    """Model data inputs for one cell, as ShapeDtypeStructs (dry-run) or
+    concrete deterministic arrays (tests / examples).
+
+    train/prefill:  tokens (B, S - P) int32 [+ embeds (B, P, d) bf16]
+    decode:         tokens (B, 1) int32 (the cache comes from init_caches)
+    """
+    b = shape.global_batch
+    p = cfg.num_prefix_embeds
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        specs = {"tokens": ((b, 1), jnp.int32)}
+    else:
+        specs = {"tokens": ((b, shape.seq_len - p), jnp.int32)}
+        if p:
+            specs["embeds"] = ((b, p, cfg.d_model), dt)
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in specs.items()}
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (s, d) in specs.items():
+        if d == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=s), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s), d)
+    return out

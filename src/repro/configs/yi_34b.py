@@ -1,0 +1,25 @@
+"""yi-34b [dense]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000
+— llama-arch GQA [arXiv:2403.04652; hf]."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    family="dense",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    mlp_type="swiglu",
+    rope_theta=5e6,
+).validate()
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+    head_dim=16, d_ff=192, vocab_size=256, dtype="float32",
+).validate()

@@ -1,0 +1,37 @@
+"""Core numerics: the paper's contribution (Zolo-PD / Zolo-SVD family)."""
+
+from repro.core.coeffs import (
+    choose_r,
+    qdwh_coeffs,
+    qdwh_iter_count,
+    qdwh_schedule_np,
+    zolo_coeffs,
+    zolo_coeffs_np,
+    zolo_iter_count,
+    zolo_schedule_np,
+)
+from repro.core.eig import block_jacobi_eigh, eigh, padded_block_jacobi_eigh
+from repro.core.newton import scaled_newton_pd
+from repro.core.norms import (
+    condition_estimate,
+    sigma_max_power,
+    sigma_max_upper,
+    sigma_min_lower,
+)
+from repro.core.qdwh import PolarInfo, form_h, qdwh_pd, qdwh_pd_static
+from repro.core.structured_qr import (
+    dense_stacked_qr_q1q2,
+    structured_qr_factor,
+    structured_qr_flops,
+    structured_qr_q1q2,
+)
+from repro.core.svd import (
+    jacobi_svd,
+    orthogonality,
+    polar_decompose,
+    polar_svd,
+    svd_residual,
+)
+from repro.core.zolo import polar_canonical, zolo_pd, zolo_pd_static
+
+__all__ = [k for k in dir() if not k.startswith("_")]

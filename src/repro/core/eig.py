@@ -1,0 +1,133 @@
+"""Symmetric eigensolvers for the H-factor stage (paper Alg. 2 step 2).
+
+The paper uses ELPA (two-stage tridiagonalization).  Per DESIGN.md §3 we
+supply the *role* with TPU-native solvers:
+
+* :func:`eigh`         — ``jnp.linalg.eigh`` (XLA's TPU eigh is itself a
+                         QDWH-based spectral divide-and-conquer, i.e. the
+                         same algorithm family as this paper).
+* :func:`block_jacobi_eigh` — two-sided block-Jacobi with a round-robin
+                         (tournament) ordering: every round applies b/2
+                         *disjoint* block rotations, so rounds vmap/shard
+                         cleanly — the matmul-rich, loosely-coupled member
+                         of the family (ELPA's scalability role).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def eigh(h):
+    return jnp.linalg.eigh(h)
+
+
+def round_robin_schedule(b: int) -> np.ndarray:
+    """Tournament schedule: (b-1) rounds x (b/2) disjoint pairs covering all
+    unordered pairs of {0..b-1}.  b must be even."""
+    assert b % 2 == 0
+    players = list(range(b))
+    rounds = []
+    for _ in range(b - 1):
+        pairs = [(players[i], players[b - 1 - i]) for i in range(b // 2)]
+        rounds.append([(min(p, q), max(p, q)) for p, q in pairs])
+        players = [players[0]] + [players[-1]] + players[1:-1]
+    return np.asarray(rounds)  # (b-1, b/2, 2)
+
+
+def _offdiag_norm(h, nb: int):
+    n = h.shape[-1]
+    b = n // nb
+    hb = h.reshape(b, nb, b, nb)
+    mask = 1.0 - jnp.eye(b, dtype=h.dtype)[:, None, :, None]
+    return jnp.sqrt(jnp.sum((hb * mask) ** 2))
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "max_sweeps"))
+def block_jacobi_eigh(h, nb: int = 32, max_sweeps: int = 12, tol=None):
+    """Two-sided block-Jacobi eigendecomposition of symmetric ``h``.
+
+    Returns (w, v) with ``h @ v = v * w`` (ascending), like jnp.linalg.eigh.
+    ``n`` must be divisible by ``nb`` and ``n // nb`` must be even
+    (drivers pad with an identity corner otherwise).
+    """
+    n = h.shape[-1]
+    dtype = h.dtype
+    assert n % nb == 0 and (n // nb) % 2 == 0
+    b = n // nb
+    sched = jnp.asarray(round_robin_schedule(b))  # (rounds, pairs, 2)
+    nrounds = sched.shape[0]
+    tol = tol if tol is not None else 30 * float(jnp.finfo(dtype).eps)
+
+    def do_round(carry, pairs):
+        h, v = carry
+        p = pairs[:, 0]
+        q = pairs[:, 1]
+        # gather row indices for each pair: (npairs, 2*nb)
+        row_ids = (jnp.concatenate(
+            [p[:, None] * nb + jnp.arange(nb)[None, :],
+             q[:, None] * nb + jnp.arange(nb)[None, :]], axis=1))
+        rows = h[row_ids.reshape(-1), :].reshape(-1, 2 * nb, n)
+        # subproblem S_i = rows_i[:, row_ids_i]
+        sub = jnp.take_along_axis(
+            rows, row_ids[:, None, :].repeat(2 * nb, axis=1), axis=2)
+        sub = 0.5 * (sub + jnp.swapaxes(sub, -1, -2))
+        _, j = jnp.linalg.eigh(sub)  # (npairs, 2nb, 2nb)
+        # row phase: rows <- J^T rows
+        rows_new = jnp.einsum("pij,pin->pjn", j, rows)
+        h = h.at[row_ids.reshape(-1), :].set(rows_new.reshape(-1, n))
+        # column phase: cols <- cols J
+        cols = h[:, row_ids.reshape(-1)].reshape(n, -1, 2 * nb)
+        cols = jnp.swapaxes(cols, 0, 1)  # (npairs, n, 2nb)
+        cols_new = jnp.einsum("pni,pij->pnj", cols, j)
+        h = h.at[:, row_ids.reshape(-1)].set(
+            jnp.swapaxes(cols_new, 0, 1).reshape(n, -1))
+        # accumulate eigenvectors: V <- V J (column op)
+        vcols = v[:, row_ids.reshape(-1)].reshape(n, -1, 2 * nb)
+        vcols = jnp.swapaxes(vcols, 0, 1)
+        vcols_new = jnp.einsum("pni,pij->pnj", vcols, j)
+        v = v.at[:, row_ids.reshape(-1)].set(
+            jnp.swapaxes(vcols_new, 0, 1).reshape(n, -1))
+        return (h, v), None
+
+    def sweep_body(state):
+        h, v, s, off = state
+        (h, v), _ = jax.lax.scan(do_round, (h, v), sched)
+        off = _offdiag_norm(h, nb) / jnp.maximum(
+            jnp.sqrt(jnp.sum(h * h)), jnp.finfo(dtype).tiny)
+        return h, v, s + 1, off
+
+    def sweep_cond(state):
+        _, _, s, off = state
+        return jnp.logical_and(s < max_sweeps, off > tol)
+
+    v0 = jnp.eye(n, dtype=dtype)
+    h, v, _, _ = jax.lax.while_loop(
+        sweep_cond, sweep_body, (h, v0, jnp.int32(0), jnp.asarray(1.0, dtype)))
+    w = jnp.diag(h)
+    order = jnp.argsort(w)
+    return w[order], v[:, order]
+
+
+def padded_block_jacobi_eigh(h, nb: int = 32, max_sweeps: int = 12):
+    """block_jacobi_eigh with automatic padding to (even multiple of nb)."""
+    n = h.shape[-1]
+    b = -(-n // nb)
+    if b % 2:
+        b += 1
+    npad = b * nb - n
+    if npad:
+        # pad with an identity corner scaled beyond the spectrum so the
+        # padding eigenpairs separate cleanly and are dropped afterwards.
+        big = 2.0 * jnp.max(jnp.abs(h)) * n + 1.0
+        hp = jnp.zeros((n + npad, n + npad), h.dtype)
+        hp = hp.at[:n, :n].set(h)
+        hp = hp.at[jnp.arange(n, n + npad), jnp.arange(n, n + npad)].set(big)
+        w, v = block_jacobi_eigh(hp, nb=nb, max_sweeps=max_sweeps)
+        return w[:n], v[:n, :n]
+    return block_jacobi_eigh(h, nb=nb, max_sweeps=max_sweeps)

@@ -1,0 +1,171 @@
+"""SVD via polar decomposition + symmetric eigendecomposition.
+
+Paper Algorithm 2 (Zolo-SVD) and its QDWH-SVD sibling:
+
+    1.  A = Q_p H          (Zolo-PD / QDWH-PD / scaled Newton)
+    2.  H = V diag(w) V^T  (eigh or block-Jacobi; the ELPA role)
+    3.  U = Q_p V,  sigma = w  (descending)
+
+plus the direct baselines: ``jnp.linalg.svd`` (the PDGESVD role) and a
+one-sided (Hestenes) block-Jacobi SVD.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import eig as _eig
+from repro.core import newton as _newton
+from repro.core import norms as _norms
+from repro.core import qdwh as _qdwh
+from repro.core import zolo as _zolo
+
+
+def polar_decompose(a, method: str = "zolo", **kw):
+    """Unified polar decomposition dispatcher.  Returns (q, h, info)."""
+    a_work, transposed = _zolo.polar_canonical(a)
+    if method == "zolo":
+        q, h, info = _zolo.zolo_pd(a_work, **kw)
+    elif method == "zolo_static":
+        q, h, info = _zolo.zolo_pd_static(a_work, **kw)
+    elif method == "qdwh":
+        q, h, info = _qdwh.qdwh_pd(a_work, **kw)
+    elif method == "qdwh_static":
+        q, h, info = _qdwh.qdwh_pd_static(a_work, **kw)
+    elif method == "newton":
+        q, h, info = _newton.scaled_newton_pd(a_work, **kw)
+    elif method == "svd":  # oracle
+        u, s, vh = jnp.linalg.svd(a_work, full_matrices=False)
+        q = u @ vh
+        h = (vh.swapaxes(-1, -2) * s[..., None, :]) @ vh
+        info = _qdwh.PolarInfo(jnp.int32(0), jnp.asarray(0.0, a.dtype),
+                               jnp.asarray(1.0, jnp.float32))
+    else:
+        raise ValueError(f"unknown polar method: {method}")
+    if transposed:
+        q = jnp.swapaxes(q, -1, -2)
+        # For A (m < n): A = Q H_right with H_right acting on the right;
+        # callers that need H for the SVD use the canonical orientation.
+    return q, h, info
+
+
+def polar_svd(a, method: str = "zolo", eig_method: str = "eigh",
+              nb: int = 32, **kw):
+    """SVD A = U diag(s) V^H via PD + EIG (paper Alg. 2).
+
+    Returns (u, s, vh) with s descending — drop-in for
+    ``jnp.linalg.svd(a, full_matrices=False)``.
+    """
+    a_work, transposed = _zolo.polar_canonical(a)
+    kw.setdefault("want_h", True)
+    if method == "zolo":
+        q, h, _ = _zolo.zolo_pd(a_work, **kw)
+    elif method == "zolo_static":
+        q, h, _ = _zolo.zolo_pd_static(a_work, **kw)
+    elif method == "qdwh":
+        q, h, _ = _qdwh.qdwh_pd(a_work, **kw)
+    elif method == "newton":
+        q, h, _ = _newton.scaled_newton_pd(a_work, **kw)
+    else:
+        raise ValueError(f"unknown polar method: {method}")
+
+    if eig_method == "eigh":
+        w, v = _eig.eigh(h)
+    elif eig_method == "jacobi":
+        w, v = _eig.padded_block_jacobi_eigh(h, nb=nb)
+    else:
+        raise ValueError(f"unknown eig method: {eig_method}")
+
+    u = jnp.einsum("...mk,...kn->...mn", q, v)
+    # ascending -> descending; fold any tiny negative eigenvalue's sign
+    # into U so that s >= 0.
+    sign = jnp.where(w < 0, -1.0, 1.0).astype(a.dtype)
+    s = jnp.abs(w)
+    u = u * sign[..., None, :]
+    order = jnp.argsort(-s, axis=-1)
+    s = jnp.take_along_axis(s, order, axis=-1)
+    u = jnp.take_along_axis(u, order[..., None, :], axis=-1)
+    v = jnp.take_along_axis(v, order[..., None, :], axis=-1)
+    vh = jnp.swapaxes(v, -1, -2)
+    if transposed:
+        # a = (u s vh)^T = v s u^T
+        return vh.swapaxes(-1, -2) * 1.0, s, jnp.swapaxes(u, -1, -2)
+    return u, s, vh
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "max_sweeps"))
+def jacobi_svd(a, nb: int = 32, max_sweeps: int = 16, tol=None):
+    """One-sided (Hestenes) block-Jacobi SVD — direct-method baseline.
+
+    Orthogonalizes column blocks pairwise with the same tournament
+    schedule as the eigensolver.  Requires n % nb == 0 and n//nb even.
+    Returns (u, s, vh), s descending.
+    """
+    m, n = a.shape
+    dtype = a.dtype
+    assert n % nb == 0 and (n // nb) % 2 == 0
+    b = n // nb
+    sched = jnp.asarray(_eig.round_robin_schedule(b))
+    tol = tol if tol is not None else 30 * float(jnp.finfo(dtype).eps)
+
+    def do_round(carry, pairs):
+        x, v = carry
+        p, q = pairs[:, 0], pairs[:, 1]
+        col_ids = jnp.concatenate(
+            [p[:, None] * nb + jnp.arange(nb)[None, :],
+             q[:, None] * nb + jnp.arange(nb)[None, :]], axis=1)
+        flat = col_ids.reshape(-1)
+        blocks = x[:, flat].reshape(m, -1, 2 * nb).swapaxes(0, 1)
+        gram = jnp.einsum("pmi,pmj->pij", blocks, blocks)
+        _, j = jnp.linalg.eigh(gram)
+        # descending eigenvalue order keeps big columns first (stability)
+        j = j[:, :, ::-1]
+        blocks_new = jnp.einsum("pmi,pij->pmj", blocks, j)
+        x = x.at[:, flat].set(blocks_new.swapaxes(0, 1).reshape(m, -1))
+        vblocks = v[:, flat].reshape(n, -1, 2 * nb).swapaxes(0, 1)
+        vnew = jnp.einsum("pni,pij->pnj", vblocks, j)
+        v = v.at[:, flat].set(vnew.swapaxes(0, 1).reshape(n, -1))
+        return (x, v), None
+
+    def off_measure(x):
+        g = x.T @ x
+        d = jnp.sqrt(jnp.maximum(jnp.diag(g), jnp.finfo(dtype).tiny))
+        gn = g / jnp.outer(d, d)
+        return jnp.sqrt(jnp.sum(jnp.tril(gn, -1) ** 2)) / n
+
+    def body(state):
+        x, v, s, off = state
+        (x, v), _ = jax.lax.scan(do_round, (x, v), sched)
+        return x, v, s + 1, off_measure(x)
+
+    def cond(state):
+        _, _, s, off = state
+        return jnp.logical_and(s < max_sweeps, off > tol)
+
+    x, v, _, _ = jax.lax.while_loop(
+        cond, body, (a, jnp.eye(n, dtype=dtype), jnp.int32(0),
+                     jnp.asarray(1.0, dtype)))
+    s = jnp.linalg.norm(x, axis=0)
+    order = jnp.argsort(-s)
+    s = s[order]
+    u = x[:, order] / jnp.maximum(s[None, :], jnp.finfo(dtype).tiny)
+    vh = v[:, order].T
+    return u, s, vh
+
+
+def svd_residual(a, u, s, vh):
+    """Paper eq. (13): ||A - U diag(s) V^H||_F / ||A||_2."""
+    rec = jnp.einsum("...mk,...kn->...mn", u * s[..., None, :], vh)
+    a2 = _norms.sigma_max_power(a, iters=20)
+    return _norms.frobenius(a - rec) / a2
+
+
+def orthogonality(q):
+    """||I - Q^H Q||_F / n (paper's OrthL/OrthR)."""
+    n = q.shape[-1]
+    g = jnp.einsum("...mk,...mn->...kn", q, q)
+    return _norms.frobenius(g - jnp.eye(n, dtype=q.dtype)) / n

@@ -1,0 +1,260 @@
+"""Zolo-PD: polar decomposition via composed Zolotarev functions.
+
+Paper Algorithm 1 / Algorithm 3, adapted to TPU per DESIGN.md §3:
+
+* The r independent terms of eq. (12) are evaluated as one *batched*
+  computation over a leading ``r`` axis (maps to the paper's r process
+  groups; on a TPU slice the batch either vmaps onto the MXU or is split
+  over a mesh axis by ``repro.dist.grouped``).
+* **Gram sharing** (beyond-paper): within one address space the Gram
+  product ``G = X^T X`` is computed once and shared by all r shifted
+  factorizations Z_j = G + c_{2j-1} I.  The paper-faithful grouped mode
+  (each group recomputes G) lives in ``repro.dist.grouped``.
+* The first (ill-conditioned) iteration uses the *structured QR* of
+  ``[X; sqrt(c) I]`` — either the paper-faithful blocked Householder
+  (:mod:`repro.core.structured_qr`, MPDGEQRF/MPDORGQR analogue) or the
+  TPU-native shifted CholeskyQR2 — selected by ``qr_mode``.
+
+Drivers:
+
+* :func:`zolo_pd`        — dynamic (runtime ``l``; ``lax.while_loop``,
+                           in-graph Zolotarev coefficients via AGM/Landen).
+* :func:`zolo_pd_static` — trace-time schedule, fully unrolled; used by
+                           the ZoloMuon optimizer and dry-runs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coeffs as _coeffs
+from repro.core import norms as _norms
+from repro.core.qdwh import PolarInfo, form_h
+from repro.core.structured_qr import structured_qr_q1q2 as _structured_qr_q1q2
+
+
+def _gram(x):
+    """G = X^T X with f32-or-better accumulation."""
+    return jnp.einsum("...mk,...mn->...kn", x, x,
+                      preferred_element_type=jnp.promote_types(x.dtype,
+                                                               jnp.float32))
+
+
+def _chol_terms(x, c_odd, gram=None):
+    """T_j = X (X^T X + c_{2j-1} I)^{-1} for all j, batched over r.
+
+    Returns W with shape (r, ..., n, m) holding Z_j^{-1} X^T (transposed
+    terms); callers combine as sum_j a_j W_j^T.
+    """
+    n = x.shape[-1]
+    dtype = x.dtype
+    g = _gram(x).astype(dtype) if gram is None else gram
+    eye = jnp.eye(n, dtype=dtype)
+    z = g[None] + c_odd[:, None, None].astype(dtype) * eye  # (r, n, n)
+    l = jnp.linalg.cholesky(z)
+    xt = jnp.broadcast_to(jnp.swapaxes(x, -1, -2), (c_odd.shape[0],) + x.shape[:-2] + (n, x.shape[-2]))
+    y = jax.lax.linalg.triangular_solve(l, xt, left_side=True, lower=True)
+    w = jax.lax.linalg.triangular_solve(
+        l, y, left_side=True, lower=True, transpose_a=True)
+    return w  # (r, n, m)
+
+
+def _zolo_iter_chol(x, c, a, mhat):
+    """One Cholesky-variant Zolotarev iteration (Alg. 1 step 4d)."""
+    c_odd = c[0::2]
+    w = _chol_terms(x, c_odd)
+    t = jnp.einsum("j,jnm->mn", a.astype(x.dtype), w)
+    return mhat.astype(x.dtype) * (x + t)
+
+
+def _zolo_iter_cholqr2(x, c, a, mhat):
+    """Inverse-free iteration via shifted CholeskyQR2 (eq. 12 analogue).
+
+    Q1_j = X R_j^{-1}, Q2_j = sqrt(c_j) R_j^{-1} with R_j from a two-pass
+    shifted Cholesky QR of [X; sqrt(c_j) I]; then
+    T_j = (a_j / sqrt(c_j)) Q1_j Q2_j^T.  Explicit Q (paper's MPDORGQR role)
+    keeps the term stable for much smaller c_j than a single Cholesky.
+    """
+    n = x.shape[-1]
+    dtype = x.dtype
+    c_odd = c[0::2]
+    r = c_odd.shape[0]
+    sqrt_c = jnp.sqrt(c_odd).astype(dtype)
+    eye = jnp.eye(n, dtype=dtype)
+
+    g = _gram(x).astype(dtype)
+    z = g[None] + c_odd[:, None, None].astype(dtype) * eye
+    l1 = jnp.linalg.cholesky(z)  # R1 = L1^T
+    xb = jnp.broadcast_to(x, (r,) + x.shape)
+    # Q1 = X R1^{-1}  (right-solve against upper-triangular R1 = L1^T)
+    q1 = jax.lax.linalg.triangular_solve(
+        l1, xb, left_side=False, lower=True, transpose_a=True)
+    # Q2 = sqrt(c) R1^{-1}
+    q2 = sqrt_c[:, None, None] * jax.lax.linalg.triangular_solve(
+        l1, jnp.broadcast_to(eye, (r, n, n)),
+        left_side=False, lower=True, transpose_a=True)
+    # Second pass restores orthogonality: G2 = Q^T Q = Q1^T Q1 + Q2^T Q2.
+    g2 = (jnp.einsum("jmk,jmn->jkn", q1, q1,
+                     preferred_element_type=jnp.promote_types(dtype, jnp.float32))
+          + jnp.einsum("jmk,jmn->jkn", q2, q2,
+                       preferred_element_type=jnp.promote_types(dtype, jnp.float32))
+          ).astype(dtype)
+    l2 = jnp.linalg.cholesky(g2)
+    q1 = jax.lax.linalg.triangular_solve(
+        l2, q1, left_side=False, lower=True, transpose_a=True)
+    q2 = jax.lax.linalg.triangular_solve(
+        l2, q2, left_side=False, lower=True, transpose_a=True)
+    t = jnp.einsum("j,jmk,jnk->mn", (a / jnp.sqrt(c_odd)).astype(dtype),
+                   q1, q2)
+    return mhat.astype(dtype) * (x + t)
+
+
+def _zolo_iter_householder(x, c, a, mhat, block: int = 32):
+    """Paper-faithful first iteration: blocked *structured* Householder QR
+    of [X; sqrt(c_j) I] (MPDGEQRF/MPDORGQR analogue, §3.1)."""
+    dtype = x.dtype
+    c_odd = c[0::2]
+    terms = []
+    for j in range(c_odd.shape[0]):
+        q1, q2 = _structured_qr_q1q2(x, jnp.sqrt(c_odd[j]).astype(dtype),
+                                     block=block)
+        terms.append((a[j] / jnp.sqrt(c_odd[j])).astype(dtype)
+                     * jnp.einsum("mk,nk->mn", q1, q2))
+    return mhat.astype(dtype) * (x + sum(terms))
+
+
+_ITER_FNS = {
+    "chol": _zolo_iter_chol,
+    "cholqr2": _zolo_iter_cholqr2,
+    "householder": _zolo_iter_householder,
+}
+
+
+def zolo_pd_static(a, *, l0: float, r: Optional[int] = None,
+                   max_iters: int = 6, want_h: bool = False,
+                   qr_mode: str = "cholqr2", qr_iters: int = 1,
+                   hermitian_source=None):
+    """Unrolled Zolo-PD with a trace-time coefficient schedule.
+
+    ``a`` must be pre-scaled (sigma_max <= 1) with singular values in
+    [l0, 1].  The first ``qr_iters`` iterations use ``qr_mode``
+    ("cholqr2" | "householder" | "chol"); the rest use the shared-Gram
+    Cholesky variant.  Returns (Q, H or None, PolarInfo).
+    """
+    if r is None:
+        r = _coeffs.choose_r(1.0 / float(l0))
+    sched = _coeffs.zolo_schedule_np(float(l0), r, max_iters=max_iters)
+    coeff_dtype = jnp.promote_types(a.dtype, jnp.float32)
+    x = a
+    for i, it in enumerate(sched):
+        c = jnp.asarray(it.c, coeff_dtype)
+        av = jnp.asarray(it.a, coeff_dtype)
+        mh = jnp.asarray(it.mhat, coeff_dtype)
+        fn = _ITER_FNS[qr_mode] if i < qr_iters else _zolo_iter_chol
+        x = fn(x, c, av, mh)
+    src = a if hermitian_source is None else hermitian_source
+    info = PolarInfo(iterations=jnp.int32(len(sched)),
+                     residual=jnp.asarray(0.0, a.dtype),
+                     l_final=jnp.asarray(sched[-1].l_after, jnp.float32))
+    if want_h:
+        return x, form_h(x, src), info
+    return x, None, info
+
+
+def zolo_pd(a, r: int = 3, *, alpha=None, l=None, max_iters: int = 8,
+            eps: Optional[float] = None, want_h: bool = True,
+            first_mode: str = "auto", hh_block: int = 32):
+    """Dynamic Zolo-PD (paper Alg. 1/3) of ``a`` with m >= n.
+
+    ``r`` is static (it fixes array shapes); coefficients are computed
+    in-graph from the running lower bound via the JAX elliptic functions,
+    so a single compiled function serves any conditioning.
+
+    The *first* iteration is peeled out of the while-loop and selects its
+    factorization by stability regime (the paper's QR-first policy):
+
+      l <  ~10 sqrt(eps)  -> structured Householder QR  (paper §3.1)
+      l <  0.05           -> shifted CholeskyQR2         (TPU fast path)
+      else                -> shared-Gram Cholesky        (eq. 4 analogue)
+
+    ``first_mode`` in {"auto", "householder", "cholqr2", "chol"} — "auto"
+    switches at runtime via lax.switch; a static choice compiles only one
+    branch.  All remaining iterations use the shared-Gram Cholesky form
+    (after one Zolotarev map the interval is always in Cholesky range).
+    """
+    dtype = a.dtype
+    eps = eps or float(jnp.finfo(dtype).eps)
+    # alpha must be a guaranteed upper bound (paper: alpha assumed known/
+    # estimated); the loose bound costs a few extra decades of l, which at
+    # Zolotarev convergence rates is at most one extra iteration.  Callers
+    # with sharp knowledge (paper Table 3 setting) pass alpha explicitly.
+    alpha = _norms.sigma_max_upper(a) if alpha is None else jnp.asarray(alpha)
+    x0 = a / alpha.astype(dtype)
+    l0 = _norms.sigma_min_lower_qr(x0) if l is None else jnp.asarray(l)
+    l0 = jnp.clip(l0, 4 * eps, 1.0 - eps)
+    l0 = l0.astype(jnp.result_type(l0, 0.0))
+    tol = eps ** (1.0 / (2 * r + 1))
+    hh_thresh = 10.0 * eps ** 0.5
+    qr_thresh = 0.05
+
+    # --- peeled first iteration -------------------------------------------
+    c0, a0, m0 = _coeffs.zolo_coeffs(l0, r)
+    hh = functools.partial(_zolo_iter_householder, block=hh_block)
+    if first_mode == "auto":
+        branch = (jnp.int32(0) + (l0 >= hh_thresh).astype(jnp.int32)
+                  + (l0 >= qr_thresh).astype(jnp.int32))
+        x1 = jax.lax.switch(
+            branch,
+            [lambda x_: hh(x_, c0, a0, m0),
+             lambda x_: _zolo_iter_cholqr2(x_, c0, a0, m0),
+             lambda x_: _zolo_iter_chol(x_, c0, a0, m0)],
+            x0)
+    else:
+        x1 = _ITER_FNS[first_mode](x0, c0, a0, m0) if first_mode != "householder" \
+            else hh(x0, c0, a0, m0)
+    res1 = _norms.frobenius(x1 - x0) / jnp.maximum(
+        _norms.frobenius(x1), jnp.finfo(dtype).tiny)
+    l1 = jnp.clip(_coeffs.zolo_l_update(l0, c0, m0), 0.0, 1.0 - eps)
+
+    # --- remaining iterations: shared-Gram Cholesky ------------------------
+    # The stopping rule is the paper's residual criterion (Alg. 1 step 4e)
+    # only: an interval-bound certificate (stop when l >= 1 - O(eps)) is
+    # unsound in finite precision at extreme kappa — the fp iterate lags
+    # the exact-arithmetic l recursion (measured: orth 4e-5 where the
+    # certificate claimed convergence at kappa 1e16).  The residual rule
+    # reproduces the paper's *measured* Tables 5/10 (theory + <= 1).
+    def cond(state):
+        _, _, k, res = state
+        return jnp.logical_and(k < max_iters, res > tol)
+
+    def body(state):
+        x, l, k, _ = state
+        c, av, mh = _coeffs.zolo_coeffs(l, r)
+        x_new = _zolo_iter_chol(x, c, av, mh)
+        res = _norms.frobenius(x_new - x) / jnp.maximum(
+            _norms.frobenius(x_new), jnp.finfo(dtype).tiny)
+        l_new = jnp.clip(_coeffs.zolo_l_update(l, c, mh), 0.0, 1.0 - eps)
+        return x_new, l_new, k + 1, res
+
+    x, l_fin, k, res = jax.lax.while_loop(
+        cond, body, (x1, l1, jnp.int32(1), res1))
+    info = PolarInfo(iterations=k, residual=res, l_final=l_fin)
+    if want_h:
+        return x, form_h(x, a), info
+    return x, None, info
+
+
+def polar_canonical(a):
+    """Return (a_work, transposed) with a_work.shape[-2] >= a_work.shape[-1].
+
+    polar(A^T) = polar(A)^T for the orthogonal factor; callers transpose
+    back.  Keeps the Gram matrix at min(m, n)^2.
+    """
+    m, n = a.shape[-2:]
+    if m >= n:
+        return a, False
+    return jnp.swapaxes(a, -1, -2), True

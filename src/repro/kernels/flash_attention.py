@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: causal flash attention (serving/training hot spot).
+
+Beyond-paper addition: the LM stack's chunked-softmax attention as an
+explicit VMEM-tiled kernel.  Grid (batch*kv_heads*groups, q_blocks,
+kv_blocks); the kv dimension is ``arbitrary`` (sequential) so the online
+(max, sum, acc) state lives in VMEM scratch across kv steps.  Causality
+is enforced by masking inside the diagonal block; fully-masked kv blocks
+are skipped by the index map never visiting them (the grid's kv extent is
+per-q-block via the mask, kept simple here: full extent + mask).
+
+Validated in interpret mode against ``ref.flash_attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, bq: int, bk: int, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bk, d)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # causal mask on absolute positions
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    s = jnp.where(k_pos <= q_pos, s, -1e30)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_attention_kernel_call(q, k, v, *, bq: int = 256, bk: int = 256,
+                                interpret: bool = False):
+    """Causal attention.  q, k, v: (bh, s, d) with bh = batch*heads
+    (GQA pre-expanded by the wrapper).  Returns (bh, s, d) in q.dtype."""
+    bh, s, d = q.shape
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    scale = 1.0 / math.sqrt(d)
+    n_q = s // bq
+    n_k = s // bk
+    grid = (bh, n_q, n_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                          n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        # f32 VMEM scratch carrying the online-softmax state across the
+        # kv-sequential grid dimension
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused shifted Gram matrix  G = A^T A + c I.
+
+This is the compute hot spot of Zolo-PD's Cholesky variant (Alg. 1 step 4d
+and Alg. 3 step 4c): every iteration forms Z_j = X^T X + c_{2j-1} I.  The
+fusion saves one full n^2 read-modify-write for the +cI (and the paper's
+Gram-sharing optimization means this kernel runs once per iteration, not r
+times).
+
+Tiling: grid (n/bn, n/bn, m/bk); A is streamed twice through VMEM in
+(bk, bn) tiles; the (bn, bn) output tile accumulates in f32 across the k
+dimension (TPU ``arbitrary`` semantics on k make the revisits legal).  MXU
+alignment: all tile dims are multiples of 128 by default.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(a1_ref, a2_ref, c_ref, out_ref, *, n_k: int, bn: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a1 = a1_ref[...]
+    a2 = a2_ref[...]
+    out_ref[...] += jax.lax.dot_general(
+        a1, a2, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(k == n_k - 1, i == j))
+    def _shift_diag():
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)
+        eye = (rows == cols).astype(out_ref.dtype)
+        out_ref[...] += c_ref[0] * eye
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def gram_kernel_call(a, c, *, bn: int = 256, bk: int = 512,
+                     interpret: bool = False):
+    """G = A^T A + c I via pallas_call.  a: (m, n); c: scalar.
+
+    Returns f32 (n, n).  m, n padded to tile multiples by the wrapper in
+    ``ops.py``; this entry requires exact divisibility.
+    """
+    m, n = a.shape
+    assert n % bn == 0 and m % bk == 0, (m, n, bn, bk)
+    n_k = m // bk
+    c_arr = jnp.asarray(c, jnp.float32).reshape(1)
+
+    grid = (n // bn, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, n_k=n_k, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(a, a, c_arr)

@@ -1,0 +1,118 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding to tile multiples, dtype policy, and the CPU fallback
+(interpret=True executes the kernel body in Python for validation; real
+deployments run the compiled TPU kernels).  ``use_pallas=False`` routes to
+the jnp oracle — the dry-run path uses the oracle so XLA:TPU's own fusions
+are what the roofline counts, while the Pallas kernels remain the
+hand-tuned hot-spot option (benchmarks compare both).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.gram import gram_kernel_call
+from repro.kernels.matmul import matmul_kernel_call
+from repro.kernels.polar_update import polar_update_kernel_call
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult_rows, mult_cols):
+    m, n = x.shape[-2:]
+    pm = (-m) % mult_rows
+    pn = (-n) % mult_cols
+    if pm or pn:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, pm), (0, pn)]
+        x = jnp.pad(x, pad)
+    return x, (m, n)
+
+
+def _pick_tile(dim: int, target: int, align: int = 128) -> int:
+    """Largest tile <= target that divides dim after align-padding."""
+    padded = dim + ((-dim) % align)
+    t = min(target, padded)
+    while padded % t:
+        t -= align
+    return max(t, align)
+
+
+def gram(a, c=0.0, *, bn: int = 256, bk: int = 512, use_pallas: bool = True):
+    """G = A^T A + c I with f32 accumulation."""
+    if not use_pallas:
+        return ref.gram_ref(a, c)
+    m, n = a.shape
+    bn = _pick_tile(n, bn)
+    bk = _pick_tile(m, bk)
+    a_p, _ = _pad_to(a, bk, bn)
+    g = gram_kernel_call(a_p, c, bn=bn, bk=bk, interpret=_interpret())
+    return g[:n, :n]
+
+
+def matmul(a, b, alpha=1.0, *, bm: int = 256, bn: int = 256, bk: int = 512,
+           use_pallas: bool = True):
+    """C = alpha * A @ B with f32 accumulation."""
+    if not use_pallas:
+        return ref.matmul_ref(a, b, alpha)
+    m, k = a.shape
+    _, n = b.shape
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    bk = _pick_tile(k, bk)
+    a_p, _ = _pad_to(a, bm, bk)
+    b_p, _ = _pad_to(b, bk, bn)
+    c = matmul_kernel_call(a_p, b_p, alpha, bm=bm, bn=bn, bk=bk,
+                           interpret=_interpret())
+    return c[:m, :n]
+
+
+def polar_update(x, t, a, mhat, *, bm: int = 256, bn: int = 256,
+                 use_pallas: bool = True):
+    """X2 = mhat * (X + sum_j a_j T_j)."""
+    if not use_pallas:
+        return ref.polar_update_ref(x, t, a, mhat)
+    m, n = x.shape
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    x_p, _ = _pad_to(x, bm, bn)
+    t_p, _ = _pad_to(t, bm, bn)
+    out = polar_update_kernel_call(x_p, t_p, a, mhat, bm=bm, bn=bn,
+                                   interpret=_interpret())
+    return out[:m, :n]
+
+
+def flash_attention(q, k, v, *, bq: int = 256, bk: int = 256,
+                    use_pallas: bool = True):
+    """Causal flash attention.  q/k/v: (b, s, h, d) (GQA pre-expanded).
+
+    Pallas kernel with online-softmax VMEM state; oracle fallback via
+    ``use_pallas=False``."""
+    from repro.kernels.flash_attention import flash_attention_kernel_call
+
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=True).astype(q.dtype)
+    b, s, h, d = q.shape
+
+    def pick_seq_tile(target: int) -> int:
+        # largest divisor of s that is <= target and a multiple of 16
+        # (the seq dim has no MXU 128-alignment requirement)
+        for t in range(min(target, s), 15, -16):
+            if s % t == 0 and t % 16 == 0:
+                return t
+        return s  # fall back: single tile
+
+    bq = pick_seq_tile(bq)
+    bk = pick_seq_tile(bk)
+    qk = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    o = flash_attention_kernel_call(qk, kk, vk, bq=bq, bk=bk,
+                                    interpret=_interpret())
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(a, c):
+    """G = A^T A + c I, f32."""
+    n = a.shape[1]
+    g = jnp.einsum("mk,mn->kn", a, a, preferred_element_type=jnp.float32)
+    return g + jnp.asarray(c, jnp.float32) * jnp.eye(n, dtype=jnp.float32)
+
+
+def matmul_ref(a, b, alpha=1.0):
+    """C = alpha * A @ B, f32."""
+    c = jnp.einsum("mk,kn->mn", a, b, preferred_element_type=jnp.float32)
+    return jnp.asarray(alpha, jnp.float32) * c
+
+
+def polar_update_ref(x, t, a, mhat):
+    """X2 = mhat * (X + sum_j a_j T_j), dtype of x."""
+    acc = x.astype(jnp.float32) + jnp.einsum(
+        "j,jmn->mn", jnp.asarray(a, jnp.float32), t.astype(jnp.float32))
+    return (jnp.asarray(mhat, jnp.float32) * acc).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None, window=None):
+    """Reference causal (optionally sliding-window) attention.
+
+    q: (b, sq, h, d); k, v: (b, skv, h, d).  Returns (b, sq, h, d) in f32.
+    Query position i attends to key j iff j <= i + (skv - sq) and, with a
+    window w, j > i + (skv - sq) - w.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = kpos <= qpos
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))

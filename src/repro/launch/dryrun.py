@@ -1,0 +1,380 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver
+
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. resolves the arch's logical->mesh sharding rules,
+  3. lowers the appropriate step (train_step / prefill_step / serve_step)
+     from ShapeDtypeStruct stand-ins — no arrays are ever allocated,
+  4. ``compile()``s it (proving the SPMD partitioning is coherent),
+  5. records memory_analysis / cost_analysis / per-kind collective bytes
+     (parsed from the optimized HLO) into a JSON blob for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as CFG
+from repro.dist.sharding import activation_hints, arch_rules, tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.config import SHAPES
+from repro.optim.muon import MuonConfig
+from repro.train.step import make_train_step, state_axes_for_params
+
+_DTYPE_BYTES = {"f8": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+                "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|f8\w*|s8|u8|s16|u16|s32|u32|s64"
+                       r"|u64|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype.split("E")[0], 4)
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _group_size(rhs: str) -> int:
+    m = _GROUPS_IOTA_RE.search(rhs)
+    if m:
+        return int(m.group(2))  # [ngroups, group_size]<=[N]
+    m = _GROUPS_LIST_RE.search(rhs)
+    if m:
+        body = m.group(1).strip()
+        return len(body.split(",")) if body else 1
+    return 1
+
+
+def _wire_factor(kind: str, gs: int) -> float:
+    """Ring-algorithm wire bytes per participating device, as a multiple
+    of the (per-device) operand bytes."""
+    if gs <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return gs - 1.0
+    if kind == "all-reduce":
+        return 2.0 * (gs - 1.0) / gs
+    if kind in ("reduce-scatter", "all-to-all"):
+        return (gs - 1.0) / gs
+    return 1.0  # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind operand bytes and estimated ring wire-bytes of every
+    collective op in optimized (partitioned, per-device) HLO text."""
+    out = {k: {"count": 0, "bytes": 0, "wire_bytes": 0.0}
+           for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(?:-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs:
+            continue  # counted at -start
+        # operand types appear inline inside the call parens
+        paren = rhs.find("(")
+        args = rhs[paren:]
+        shapes = _SHAPE_RE.findall(args)
+        if not shapes:  # fall back to the result type
+            shapes = _SHAPE_RE.findall(rhs[:paren])
+        nbytes = sum(_bytes_of(d, dims) for d, dims in shapes)
+        gs = _group_size(rhs)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+        out[kind]["wire_bytes"] += nbytes * _wire_factor(kind, gs)
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_wire_bytes"] = sum(v["wire_bytes"] for v in out.values()
+                                  if isinstance(v, dict))
+    return out
+
+
+def _sds_tree(abstract, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               stages_override=None, optimized: bool = False):
+    """Build and lower one cell.  Returns (lowered, meta).
+
+    ``stages_override``: lower a reduced variant with that many scanned
+    stages (same remainder) — used to extrapolate scan-body costs, since
+    XLA's cost analysis counts a scan body once rather than x trip-count.
+    """
+    cfg = CFG.get_config(arch)
+    if stages_override is not None:
+        pat = len(cfg.block_pattern)
+        rem = cfg.num_layers % pat
+        cfg = dataclasses.replace(
+            cfg, num_layers=pat * stages_override + rem)
+    shape = SHAPES[shape_name]
+    skip = CFG.registry.cell_supported(cfg, shape)
+    if skip:
+        return None, {"skip": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = arch_rules(cfg, mesh, shape)
+
+    import contextlib
+    hints_ctx = (activation_hints(rules) if optimized
+                 else contextlib.nullcontext())
+
+    if shape.kind == "train":
+        muon = MuonConfig(polar_dtype="bfloat16" if optimized
+                          else "float32")
+        init_fn, train_step = make_train_step(cfg, muon)
+        abstract_state = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        axes = state_axes_for_params(cfg, abstract_state.params)
+        st_sh = tree_shardings(mesh, rules, axes)
+        state_sds = _sds_tree(abstract_state, st_sh)
+        batch_abs = CFG.input_specs(cfg, shape, abstract=True)
+        batch_axes = {"tokens": ("batch", None)}
+        if "embeds" in batch_abs:
+            batch_axes["embeds"] = ("batch", None, None)
+        batch_sds = _sds_tree(batch_abs,
+                              tree_shardings(mesh, rules, batch_axes))
+        with mesh, hints_ctx:
+            lowered = jax.jit(train_step).lower(state_sds, batch_sds)
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return M.prefill(params, batch, cfg, max_len=shape.seq_len)
+
+        abstract_params = jax.eval_shape(
+            lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+        p_sh = tree_shardings(mesh, rules, M.params_axes(cfg))
+        params_sds = _sds_tree(abstract_params, p_sh)
+        batch_abs = CFG.input_specs(cfg, shape, abstract=True)
+        batch_axes = {"tokens": ("batch", None)}
+        if "embeds" in batch_abs:
+            batch_axes["embeds"] = ("batch", None, None)
+        batch_sds = _sds_tree(batch_abs,
+                              tree_shardings(mesh, rules, batch_axes))
+        with mesh, hints_ctx:
+            lowered = jax.jit(prefill_step).lower(params_sds, batch_sds)
+    else:  # decode
+        def serve_step(params, tokens, caches):
+            return M.decode_step(params, tokens, caches, cfg)
+
+        abstract_params = jax.eval_shape(
+            lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+        p_sh = tree_shardings(mesh, rules, M.params_axes(cfg))
+        params_sds = _sds_tree(abstract_params, p_sh)
+        abstract_caches = jax.eval_shape(
+            lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len))
+        c_sh = tree_shardings(mesh, rules, M.caches_axes(cfg))
+        caches_sds = _sds_tree(abstract_caches, c_sh)
+        tok_sds = _sds_tree(
+            {"t": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)},
+            {"t": tree_shardings(mesh, rules, {"t": ("batch", None)})["t"]},
+        )["t"]
+        with mesh, hints_ctx:
+            lowered = jax.jit(serve_step).lower(params_sds, tok_sds,
+                                                caches_sds)
+    meta = {"mesh": "2x16x16" if multi_pod else "16x16",
+            "devices": 512 if multi_pod else 256}
+    return lowered, meta
+
+
+def _cell_costs(lowered) -> dict:
+    """compile + extract {flops, bytes, collectives} for one lowering."""
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0))}
+    try:
+        out["collectives"] = collective_bytes(compiled.as_text())
+    except Exception:
+        out["collectives"] = None
+    return out
+
+
+def _extrapolate(v1: dict, v2: dict, stages: int) -> dict:
+    """linear-in-stages extrapolation from 1- and 2-stage variants."""
+    def lin(a, b):
+        return a + (stages - 1) * (b - a)
+
+    out = {"flops": lin(v1["flops"], v2["flops"]),
+           "bytes": lin(v1["bytes"], v2["bytes"])}
+    c1, c2 = v1.get("collectives"), v2.get("collectives")
+    if c1 and c2:
+        coll = {}
+        for k in _COLLECTIVES:
+            coll[k] = {
+                "count": int(lin(c1[k]["count"], c2[k]["count"])),
+                "bytes": int(lin(c1[k]["bytes"], c2[k]["bytes"])),
+                "wire_bytes": lin(c1[k]["wire_bytes"], c2[k]["wire_bytes"]),
+            }
+        coll["total_bytes"] = int(lin(c1["total_bytes"], c2["total_bytes"]))
+        coll["total_wire_bytes"] = lin(c1["total_wire_bytes"],
+                                       c2["total_wire_bytes"])
+        out["collectives"] = coll
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, hlo_text: bool = True,
+             optimized: bool = False) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "optimized": optimized,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod,
+                                   optimized=optimized)
+        rec.update(meta)
+        if lowered is None:
+            rec["status"] = "skip"
+            os.makedirs(out_dir, exist_ok=True)
+            fn = (f"{arch}__{shape_name}__"
+                  f"{rec['mesh'].replace('x', '_')}.json")
+            with open(os.path.join(out_dir, fn), "w") as f:
+                json.dump(rec, f, indent=1)
+            return rec
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower - t0, 1)
+        rec["compile_s"] = round(t_compile - t_lower, 1)
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(mem, k))
+                for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                          "output_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory"] = {"error": str(e)[:200]}
+        try:
+            cost = compiled.cost_analysis()
+            cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+            rec["cost"] = {k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float))
+                           and k in ("flops", "bytes accessed",
+                                     "transcendentals", "optimal_seconds")}
+        except Exception as e:
+            rec["cost"] = {"error": str(e)[:200]}
+        if hlo_text:
+            try:
+                txt = compiled.as_text()
+                rec["collectives"] = collective_bytes(txt)
+                rec["hlo_bytes"] = len(txt)
+                del txt
+            except Exception as e:
+                rec["collectives"] = {"error": str(e)[:200]}
+        # XLA costs a lax.scan body once, not x trips: extrapolate the
+        # scanned-stage costs from 1- and 2-stage lowerings (linear).
+        try:
+            cfg = CFG.get_config(arch)
+            stages = cfg.num_stages
+            if stages > 1:
+                l1, _ = lower_cell(arch, shape_name, multi_pod,
+                                   stages_override=1, optimized=optimized)
+                l2, _ = lower_cell(arch, shape_name, multi_pod,
+                                   stages_override=2, optimized=optimized)
+                v1 = _cell_costs(l1)
+                v2 = _cell_costs(l2)
+                rec["cost_extrapolated"] = _extrapolate(v1, v2, stages)
+                rec["scan_correction"] = {
+                    "stages": stages, "v1_flops": v1["flops"],
+                    "v2_flops": v2["flops"]}
+            else:
+                rec["cost_extrapolated"] = {
+                    "flops": rec["cost"].get("flops"),
+                    "bytes": rec["cost"].get("bytes accessed"),
+                    "collectives": rec.get("collectives")}
+        except Exception as e:
+            rec["cost_extrapolated"] = {"error": str(e)[:300]}
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = "".join(
+            traceback.format_exception_only(type(e), e))[-2000:]
+        rec["trace"] = traceback.format_exc()[-4000:]
+    finally:
+        rec["total_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "__opt" if optimized else ""
+    fn = (f"{arch}__{shape_name}__"
+          f"{rec['mesh'].replace('x', '_')}{suffix}.json")
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="lower with activation-sharding hints (§Perf)")
+    args = ap.parse_args()
+
+    archs = CFG.list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                fn = os.path.join(
+                    args.out, f"{arch}__{shape}__"
+                    f"{'2_16_16' if mp else '16_16'}"
+                    f"{'__opt' if args.optimized else ''}.json")
+                if args.skip_existing and os.path.exists(fn):
+                    with open(fn) as f:
+                        if json.load(f).get("status") in ("ok", "skip"):
+                            print(f"[dryrun] cached {fn}")
+                            continue
+                rec = run_cell(arch, shape, mp, args.out,
+                               optimized=args.optimized)
+                summary = {k: rec.get(k) for k in
+                           ("arch", "shape", "mesh", "status", "compile_s")}
+                if rec.get("status") == "fail":
+                    summary["error"] = rec.get("error", "")[:300]
+                print(f"[dryrun] {summary}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

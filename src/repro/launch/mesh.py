@@ -1,0 +1,37 @@
+"""Production meshes.  Importing this module never touches jax device
+state — mesh construction happens inside the functions."""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips of v5e) or 2x16x16 multi-pod mesh.
+
+    The 'pod' axis is pure data parallelism (gradient all-reduce over DCI);
+    'data' hosts DP/FSDP, 'model' hosts TP/EP.  Uses the first prod(shape)
+    devices so it works in the 512-device dry-run container for both
+    variants."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    assert len(devices) >= need, (len(devices), need)
+    arr = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for tests on whatever devices exist."""
+    import jax
+
+    devices = jax.devices()[: data * model]
+    arr = np.asarray(devices).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))

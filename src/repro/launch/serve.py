@@ -1,0 +1,56 @@
+"""Serving launcher (CPU-sized with --smoke; full config lowers via
+launch/dryrun.py decode shapes).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
+      --smoke --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as CFG
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (CFG.get_smoke_config(args.arch) if args.smoke
+           else CFG.get_config(args.arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen,
+                      temperature=args.temperature)
+    rng = np.random.default_rng(args.seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.num_prefix_embeds:
+        batch["embeds"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.num_prefix_embeds, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    t0 = time.perf_counter()
+    toks, _ = eng.generate(batch, steps=args.gen)
+    toks.block_until_ready()
+    dt = time.perf_counter() - t0
+    print(f"[serve] generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print(np.asarray(toks[:, :16]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Training launcher.
+
+Real runs on this container are CPU-sized (--smoke swaps in the reduced
+config); the same driver lowers the full config on the production mesh
+(that path is exercised via launch/dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --smoke \
+      --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs as CFG
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import SyntheticLM
+from repro.optim.muon import MuonConfig
+from repro.train.loop import TrainLoop
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--method", default="zolo",
+                    choices=["zolo", "qdwh", "ns5"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (CFG.get_smoke_config(args.arch) if args.smoke
+           else CFG.get_config(args.arch))
+    muon = MuonConfig(lr=args.lr, method=args.method)
+    init_fn, step_fn = make_train_step(cfg, muon, total_steps=args.steps)
+
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
+                       num_prefix_embeds=cfg.num_prefix_embeds,
+                       d_model=cfg.d_model, dtype=cfg.dtype, seed=args.seed)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    loop = TrainLoop(step_fn, data, ckpt=ckpt, ckpt_every=args.ckpt_every,
+                     log_path=args.log,
+                     tokens_per_step=args.batch * args.seq)
+    state = loop.resume_or_init(init_fn, jax.random.PRNGKey(args.seed))
+    state = loop.run(state, args.steps)
+    print(f"[train] finished at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""LM model stack covering the assigned architecture families."""
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.model import (
+    decode_step,
+    forward,
+    hidden_states,
+    init_caches,
+    init_params,
+    param_count,
+    params_axes,
+    prefill,
+)

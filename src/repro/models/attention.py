@@ -1,0 +1,221 @@
+"""GQA attention: chunked-flash train/prefill, ring-buffer KV decode.
+
+Pure-JAX blocked attention with online softmax (the TPU-friendly flash
+formulation): the outer loop over query chunks is unrolled in Python
+(static bounds -> causal and sliding-window chunks never touch keys they
+cannot see), the inner loop is a ``lax.scan`` over key chunks carrying the
+running (max, sum, acc).  Sliding windows slice a static [window + qc]
+key range per query chunk, so SWA costs O(S * W), not O(S^2).
+
+Decode uses a ring-buffer cache of capacity min(context, window): slot
+``s`` at step ``pos`` holds absolute position ``pos - ((pos - s) % W)``.
+RoPE is applied to keys at write time (absolute positions), so the ring
+rotation needs no re-rotation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def attn_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": L.truncated_normal_init(ks[0], (d, cfg.q_dim), 1.0, dtype),
+        "wk": L.truncated_normal_init(ks[1], (d, cfg.kv_dim), 1.0, dtype),
+        "wv": L.truncated_normal_init(ks[2], (d, cfg.kv_dim), 1.0, dtype),
+        "wo": L.truncated_normal_init(ks[3], (cfg.q_dim, d), 1.0, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+        p["k_scale"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def attn_axes(cfg, stacked: bool):
+    lead = ("layers",) if stacked else ()
+    ax = {
+        "wq": lead + ("embed", "qkv"),
+        "wk": lead + ("embed", "qkv"),
+        "wv": lead + ("embed", "qkv"),
+        "wo": lead + ("qkv", "embed"),
+    }
+    if cfg.qk_norm:
+        ax["q_scale"] = lead + (None,)
+        ax["k_scale"] = lead + (None,)
+    return ax
+
+
+def _project_qkv(params, x, positions, cfg):
+    b, s, _ = x.shape
+    kv, g, hd = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, params["wq"]).reshape(b, s, kv, g, hd)
+    k = jnp.einsum("bsd,dq->bsq", x, params["wk"]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,dq->bsq", x, params["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_scale"])
+        k = L.rms_norm(k, params["k_scale"])
+    q = L.apply_rope(q.reshape(b, s, kv * g, hd), positions,
+                     cfg.rope_theta).reshape(b, s, kv, g, hd)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _flash_chunk(q, k, v, qpos, kpos, scale, kv_chunk,
+                 window: Optional[int] = None):
+    """Online-softmax attention of one query chunk against [k, v].
+
+    q: (b, qc, kv, g, d); k/v: (b, sk, kv, d); qpos (qc,), kpos (sk,).
+    """
+    b, qc, kv, g, hd = q.shape
+    sk = k.shape[1]
+    nk = max(1, math.ceil(sk / kv_chunk))
+    pad = nk * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kc = kv_chunk
+    kpos = kpos.reshape(nk, kc)
+
+    neg = jnp.asarray(-1e30, jnp.float32)
+    m = jnp.full((b, kv, g, qc), neg, jnp.float32)
+    l = jnp.zeros((b, kv, g, qc), jnp.float32)
+    acc = jnp.zeros((b, kv, g, qc, hd), jnp.float32)
+
+    # python-unrolled kv loop (counts are small and static): keeps XLA's
+    # cost analysis honest (lax.scan bodies are costed once, not x trips)
+    # and removes loop boundaries that block fusion.
+    for i in range(nk):
+        kb = jax.lax.dynamic_slice_in_dim(k, i * kc, kc, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * kc, kc, axis=1)
+        kp = kpos[i]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kp[None, None, None, None, :] <= qpos[None, None, None, :, None]
+        if window is not None:
+            mask = mask & (kp[None, None, None, None, :]
+                           > qpos[None, None, None, :, None] - window)
+        s = jnp.where(mask, s, neg)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb, preferred_element_type=jnp.float32)
+        m = m_new
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4)  # (b, qc, kv, g, hd)
+
+
+def flash_attention(q, k, v, q_positions, k_positions, *,
+                    window: Optional[int] = None, q_chunk: int = 1024,
+                    kv_chunk: int = 1024, scale: Optional[float] = None):
+    """Causal (optionally sliding-window) attention.
+
+    q: (b, sq, kv, g, hd); k/v: (b, sk, kv, hd).  Positions are absolute.
+    Query chunks are unrolled (static causal/window bounds per chunk).
+    """
+    b, sq, kv, g, hd = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qc = min(q_chunk, sq)
+    nq = math.ceil(sq / qc)
+    outs = []
+    for i in range(nq):
+        lo = i * qc
+        hi = min(sq, lo + qc)
+        qi = q[:, lo:hi]
+        qp = q_positions[lo:hi]
+        # static key range this chunk can see (assumes q/k positions are
+        # aligned suffixes: q_positions = k_positions[-sq:])
+        k_hi = min(sk, hi + (sk - sq))
+        k_lo = 0
+        if window is not None:
+            k_lo = max(0, lo + (sk - sq) - window + 1)
+        ki = k[:, k_lo:k_hi]
+        vi = v[:, k_lo:k_hi]
+        kp = k_positions[k_lo:k_hi]
+        outs.append(_flash_chunk(qi, ki, vi, qp, kp, scale, kv_chunk,
+                                 window=window))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attn_forward(params, x, positions, cfg, *, q_chunk=1024, kv_chunk=1024):
+    """Training/prefill attention over a full sequence (causal)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(params, x, positions, cfg)
+    out = flash_attention(q, k, v, positions, positions,
+                          window=cfg.window, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk)
+    out = out.reshape(b, s, cfg.q_dim).astype(x.dtype)
+    return jnp.einsum("bsq,qd->bsd", out, params["wo"]), (k, v)
+
+
+def cache_capacity(cfg, max_len: int) -> int:
+    return min(max_len, cfg.window) if cfg.window else max_len
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, dtype):
+    w = cache_capacity(cfg, max_len)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, w, kv, hd), dtype),
+        "v": jnp.zeros((batch, w, kv, hd), dtype),
+    }
+
+
+def cache_positions(pos, w: int):
+    """Absolute position stored in each ring slot at step ``pos``."""
+    slots = jnp.arange(w)
+    return pos - ((pos - slots) % w)
+
+
+def attn_fill_cache(cache, k, v, start_pos: int):
+    """Write a prefilled [start, start+s) segment into the ring cache."""
+    w = cache["k"].shape[1]
+    s = k.shape[1]
+    if s >= w:
+        return {"k": k[:, -w:], "v": v[:, -w:]}
+    # assumes start_pos == 0 for prefill (suffix write)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, start_pos % w, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, start_pos % w, 0, 0))
+    return {"k": ck, "v": cv}
+
+
+def attn_decode(params, x, pos, cache, cfg):
+    """One-token decode.  x: (b, 1, d); pos: scalar int32 (current index).
+
+    Returns (out (b, 1, d), new_cache).
+    """
+    b = x.shape[0]
+    kv, g, hd = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, cfg.head_dim
+    w = cache["k"].shape[1]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, positions, cfg)
+    slot = (pos % w).astype(jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                      (zero, slot, zero, zero))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                      (zero, slot, zero, zero))
+    kpos = cache_positions(pos, w)  # (w,)
+    valid = kpos >= 0
+    if cfg.window:
+        valid = valid & (kpos > pos - cfg.window)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, ck,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, cfg.q_dim).astype(x.dtype)
+    out = jnp.einsum("bsq,qd->bsd", o, params["wo"])
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,100 @@
+"""Shared layers: norms, rotary embeddings, MLPs, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale, dtype=jnp.float32):
+    stddev = scale / max(1.0, (shape[-2] if len(shape) > 1 else shape[-1])) ** 0.5
+    return (stddev * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def rms_norm(x, scale=None, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def nonparam_ln(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm (no scale, no bias)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def norm(x, params, norm_type: str):
+    if norm_type == "nonparam_ln":
+        return nonparam_ln(x)
+    return rms_norm(x, params)
+
+
+def norm_param(d: int, norm_type: str):
+    return None if norm_type == "nonparam_ln" else jnp.zeros((d,), jnp.float32)
+
+
+# --- rotary position embeddings -------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    ang = ang[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLPs ------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, ff: int, mlp_type: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "wi_gate": truncated_normal_init(k1, (d, ff), 1.0, dtype),
+            "wi_up": truncated_normal_init(k2, (d, ff), 1.0, dtype),
+            "wo": truncated_normal_init(k3, (ff, d), 1.0, dtype),
+        }
+    return {
+        "wi": truncated_normal_init(k1, (d, ff), 1.0, dtype),
+        "wo": truncated_normal_init(k2, (ff, d), 1.0, dtype),
+    }
+
+
+def mlp_axes(mlp_type: str, stacked: bool):
+    lead = ("layers",) if stacked else ()
+    if mlp_type == "swiglu":
+        return {
+            "wi_gate": lead + ("embed", "mlp"),
+            "wi_up": lead + ("embed", "mlp"),
+            "wo": lead + ("mlp", "embed"),
+        }
+    return {"wi": lead + ("embed", "mlp"), "wo": lead + ("mlp", "embed")}
+
+
+def mlp_apply(params, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["wi_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return jnp.einsum("...f,fd->...d", h, params["wo"])
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])

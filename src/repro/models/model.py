@@ -1,0 +1,223 @@
+"""Public model API: init / forward / prefill / decode over the full stack.
+
+Params pytree layout:
+
+    {"embed":     (vocab_padded, d),
+     "stages":    stage pytree stacked over num_stages (leading axis),
+     "rem":       tuple of unstacked remainder layers (may be empty),
+     "final_norm": scale or None,
+     "lm_head":   (d, vocab_padded)}         (absent if tie_embeddings)
+
+Stages are scanned (optionally rematerialized); the remainder runs inline.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_stages, k_rem, k_head = jax.random.split(key, 4)
+    d = cfg.d_model
+    params = {
+        "embed": L.truncated_normal_init(
+            k_embed, (cfg.vocab_padded, d), 1.0, dtype),
+        "final_norm": L.norm_param(d, cfg.norm_type),
+    }
+    stage_keys = jax.random.split(k_stages, cfg.num_stages)
+    stages = [T.stage_init(k, cfg, dtype) for k in stage_keys]
+    params["stages"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stages)
+    rem_keys = jax.random.split(k_rem, max(1, len(cfg.remainder_blocks)))
+    params["rem"] = tuple(
+        T.layer_init(k, kind, cfg, dtype)
+        for k, kind in zip(rem_keys, cfg.remainder_blocks))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncated_normal_init(
+            k_head, (d, cfg.vocab_padded), 1.0, dtype)
+    return params
+
+
+def params_axes(cfg):
+    ax = {
+        "embed": ("vocab", "embed"),
+        "final_norm": None if cfg.norm_type == "nonparam_ln" else (None,),
+        "stages": T.stage_axes(cfg, stacked=True),
+        "rem": tuple(T.layer_axes(kind, cfg, stacked=False)
+                     for kind in cfg.remainder_blocks),
+    }
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("embed", "vocab")
+    return ax
+
+
+def _embed_inputs(params, batch, cfg):
+    """tokens (b, s_tok) [+ prefix embeds (b, n_prefix, d)] -> (b, s, d)."""
+    x = params["embed"][batch["tokens"]]
+    if cfg.num_prefix_embeds:
+        prefix = batch["embeds"].astype(x.dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+    return x
+
+
+def backbone(params, x, positions, cfg):
+    """Run stages (+ remainder) over a full sequence.
+
+    Returns (hidden (b, s, d), per-stage mixer caches, moe aux loss)."""
+
+    def stage_fn(carry, stage_params):
+        x, aux = carry
+        x, caches, a = T.stage_forward(stage_params, x, positions, cfg)
+        return (x, aux + a), caches
+
+    fn = stage_fn
+    if cfg.remat:
+        fn = jax.checkpoint(
+            stage_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_stages:
+        (x, aux), caches = jax.lax.scan(fn, (x, jnp.asarray(0.0, jnp.float32)),
+                                        params["stages"])
+    else:
+        caches_list = []
+        carry = (x, jnp.asarray(0.0, jnp.float32))
+        ns = cfg.num_stages
+        for i in range(ns):
+            sp = jax.tree.map(lambda p: p[i], params["stages"])
+            carry, c = fn(carry, sp)
+            caches_list.append(c)
+        (x, aux) = carry
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches_list) \
+            if caches_list else None
+
+    rem_caches = []
+    for lp, kind in zip(params["rem"], cfg.remainder_blocks):
+        x, cache, a = T.layer_forward(lp, kind, x, positions, cfg)
+        rem_caches.append(cache)
+        aux = aux + a
+    x = L.norm(x, params["final_norm"], cfg.norm_type)
+    return x, (caches, tuple(rem_caches)), aux
+
+
+def lm_head(params, x, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.logits_softcap:
+        cap = cfg.logits_softcap
+        logits = cap * jnp.tanh(logits.astype(jnp.float32) / cap)
+    return logits
+
+
+def forward(params, batch, cfg):
+    """Training forward.  Returns (logits (b, s, vocab_padded), aux)."""
+    x = _embed_inputs(params, batch, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x, _, aux = backbone(params, x, positions, cfg)
+    return lm_head(params, x, cfg), aux
+
+
+def hidden_states(params, batch, cfg):
+    """Training forward up to the final hidden states (loss computed
+    chunked in train/step.py to avoid materializing full logits)."""
+    x = _embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, _, aux = backbone(params, x, positions, cfg)
+    return x, aux
+
+
+# --- serving ---------------------------------------------------------------
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+
+    def one_stage():
+        return tuple(T.init_layer_cache(kind, cfg, batch, max_len, dtype)
+                     for kind in cfg.block_pattern)
+
+    stages = [one_stage() for _ in range(cfg.num_stages)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *stages)
+    rem = tuple(T.init_layer_cache(kind, cfg, batch, max_len, dtype)
+                for kind in cfg.remainder_blocks)
+    return {"stages": stacked, "rem": rem, "pos": jnp.int32(0)}
+
+
+def prefill(params, batch, cfg, max_len: int):
+    """Run the prompt through the backbone and build decode caches.
+
+    Returns (last_token_logits (b, vocab_padded), caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x, (stage_mixer_caches, rem_mixer), _ = backbone(params, x, positions, cfg)
+
+    def convert_stage(stage_caches):
+        return tuple(
+            T.prefill_layer_cache(kind, cfg, b, max_len, mc, dtype)
+            for kind, mc in zip(cfg.block_pattern, stage_caches))
+
+    # stage caches are stacked (num_stages, ...); convert leafwise
+    converted = jax.vmap(convert_stage)(stage_mixer_caches)
+    rem = tuple(
+        T.prefill_layer_cache(kind, cfg, b, max_len, mc, dtype)
+        for kind, mc in zip(cfg.remainder_blocks, rem_mixer))
+    caches = {"stages": converted, "rem": rem, "pos": jnp.int32(s)}
+    return lm_head(params, x[:, -1:], cfg)[:, 0], caches
+
+
+def decode_step(params, tokens, caches, cfg):
+    """One decode step.  tokens: (b, 1) int32.  Returns (logits, caches)."""
+    pos = caches["pos"]
+    x = params["embed"][tokens]
+
+    def stage_fn(x, inp):
+        stage_params, stage_cache = inp
+        x, new_cache = T.stage_decode(stage_params, x, pos, stage_cache, cfg)
+        return x, new_cache
+
+    x, new_stage_caches = jax.lax.scan(
+        stage_fn, x, (params["stages"], caches["stages"]))
+    new_rem = []
+    for lp, kind, cache in zip(params["rem"], cfg.remainder_blocks,
+                               caches["rem"]):
+        x, c = T.layer_decode(lp, kind, x, pos, cache, cfg)
+        new_rem.append(c)
+    x = L.norm(x, params["final_norm"], cfg.norm_type)
+    logits = lm_head(params, x, cfg)[:, 0]
+    return logits, {"stages": new_stage_caches, "rem": tuple(new_rem),
+                    "pos": pos + 1}
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def caches_axes(cfg):
+    """Logical axes for init_caches output (decode-shape dry-runs)."""
+
+    def layer_axes(kind, stacked: bool):
+        lead = ("layers",) if stacked else ()
+        if kind == "attn":
+            return {"k": lead + ("cache_batch", None, "cache_heads", None),
+                    "v": lead + ("cache_batch", None, "cache_heads", None)}
+        if kind == "rglru":
+            return (lead + ("cache_batch", "state"),
+                    lead + ("cache_batch", None, "state"))
+        return (lead + ("cache_batch", "cache_heads", None, None),
+                lead + ("cache_batch", None, "state"))
+
+    return {
+        "stages": tuple(layer_axes(kind, True)
+                        for kind in cfg.block_pattern),
+        "rem": tuple(layer_axes(kind, False)
+                     for kind in cfg.remainder_blocks),
+        "pos": "REPLICATED",
+    }

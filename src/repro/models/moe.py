@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch.
+
+Dispatch is gather/scatter-based (memory-bound), NOT the GShard one-hot
+einsum — the einsum dispatch costs O(S^2 * topk * d) flops at these shapes
+and would dominate the roofline with fake compute.  Expert matmuls are a
+single batched einsum over (E, C, d) buffers, so HLO flops are the honest
+``tokens * topk * cf`` expert cost.
+
+Tokens over capacity are dropped (standard capacity-factor semantics);
+the router uses softmax-then-top-k with renormalized weights.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import hint
+from repro.models import layers as L
+
+
+def moe_init(key, cfg, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.truncated_normal_init(ks[0], (d, e), 1.0, jnp.float32),
+        "wi_gate": L.truncated_normal_init(ks[1], (e, d, ff), 1.0, dtype),
+        "wi_up": L.truncated_normal_init(ks[2], (e, d, ff), 1.0, dtype),
+        "wo": L.truncated_normal_init(ks[3], (e, ff, d), 1.0, dtype),
+    }
+
+
+def moe_axes(cfg, stacked: bool):
+    lead = ("layers",) if stacked else ()
+    return {
+        "router": lead + ("embed", None),
+        "wi_gate": lead + ("experts", "embed", "expert_mlp"),
+        "wi_up": lead + ("experts", "embed", "expert_mlp"),
+        "wo": lead + ("experts", "expert_mlp", "embed"),
+    }
+
+
+def moe_capacity(tokens: int, cfg) -> int:
+    c = math.ceil(tokens * cfg.moe_top_k * cfg.capacity_factor
+                  / cfg.num_experts)
+    return max(8, c + (-c) % 8)
+
+
+def moe_apply(params, x, cfg):
+    """x: (b, s, d) -> (b, s, d)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    t = b * s
+    cap = moe_capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)  # (t, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(t * k)
+    # position of each (token, k) slot within its expert's buffer
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (t*k, e)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)  # running count per expert
+    pos = jnp.sum(pos * onehot, axis=1)  # (t*k,)
+    keep = pos < cap
+    # scatter into (e, cap+1, d) — expert-major so the expert axis can
+    # shard (EP); dropped slots land on each expert's trash row
+    pos_c = jnp.where(keep, pos, cap)
+    x_rep = jnp.repeat(xf, k, axis=0)  # (t*k, d)
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[flat_e, pos_c].add(x_rep, mode="drop")
+    buf = hint(buf, "experts", None, None)
+    eb = buf[:, :cap]
+
+    g = jnp.einsum("ecd,edf->ecf", eb, params["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", eb, params["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = hint(h, "experts", None, "expert_mlp")
+    y = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+    y = hint(y, "experts", None, None)
+
+    yf = jnp.pad(y, ((0, 0), (0, 1), (0, 0)))  # restore the trash row
+    out_slots = yf[flat_e, pos_c]  # (t*k, d); trash row -> zeros
+    out_slots = out_slots * (keep[:, None] & True)
+    w = (top_w.reshape(t * k).astype(jnp.float32)
+         * keep.astype(jnp.float32))[:, None]
+    out = (out_slots.astype(jnp.float32) * w).reshape(t, k, d).sum(axis=1)
+    return out.reshape(b, s, d).astype(x.dtype), _aux_loss(probs, top_i, e)
+
+
+def _aux_loss(probs, top_i, e):
+    """Switch-style load-balancing auxiliary loss."""
+    me = probs.mean(axis=0)  # (e,)
+    ce = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    return e * jnp.sum(me * ce)

@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  r_t, i_t input-dependent gates.
+
+Prefill/train uses ``lax.associative_scan`` (log-depth on TPU); decode is
+a single fused step on the (b, d_rnn) state — O(1) per token, which is why
+recurrentgemma runs the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+_C = 8.0
+
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    dr = cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": L.truncated_normal_init(ks[0], (d, dr), 1.0, dtype),
+        "in_gate": L.truncated_normal_init(ks[1], (d, dr), 1.0, dtype),
+        "conv_w": (0.1 * jax.random.normal(
+            ks[2], (cfg.conv_width, dr), jnp.float32)).astype(dtype),
+        "w_a": L.truncated_normal_init(ks[3], (dr, dr), 1.0, dtype),
+        "w_i": L.truncated_normal_init(ks[4], (dr, dr), 1.0, dtype),
+        "lam": jnp.log(jnp.expm1(  # softplus^-1 of rates in (0.9, 0.999)
+            -jnp.log(jnp.linspace(0.9, 0.999, dr)) / _C)).astype(jnp.float32),
+        "out_proj": L.truncated_normal_init(ks[5], (dr, d), 1.0, dtype),
+    }
+
+
+def rglru_axes(cfg, stacked: bool):
+    lead = ("layers",) if stacked else ()
+    return {
+        "in_x": lead + ("embed", "state"),
+        "in_gate": lead + ("embed", "state"),
+        "conv_w": lead + (None, "state"),
+        "w_a": lead + ("state", None),
+        "w_i": lead + ("state", None),
+        "lam": lead + (None,),
+        "out_proj": lead + ("state", "embed"),
+    }
+
+
+def _gates(params, xr):
+    """a_t (log-space) and gated input.  xr: (b, s, dr) f32."""
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", xr, params["w_a"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", xr, params["w_i"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with a = exp(log_a): use expm1 for stability
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gated = mult * i * xr.astype(jnp.float32)
+    return a, gated
+
+
+def _causal_conv(x, w, cache=None):
+    width = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+           if cache is None else cache)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(width))
+    return out, xp[:, -(width - 1):]
+
+
+def rglru_forward(params, x, cfg, *, init_state=None, conv_cache=None):
+    """x: (b, s, d) -> (b, s, d); returns (out, (state, conv_tail))."""
+    b, s, d = x.shape
+    xb = jnp.einsum("bsd,dr->bsr", x, params["in_x"])
+    gate = jnp.einsum("bsd,dr->bsr", x, params["in_gate"])
+    xb, conv_tail = _causal_conv(xb, params["conv_w"], conv_cache)
+    a, u = _gates(params, xb)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, u), axis=1)
+    h = bv
+    if init_state is not None:
+        h = h + av * init_state.astype(jnp.float32)[:, None, :]
+    state = h[:, -1]
+    out = h.astype(x.dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsr,rd->bsd", out, params["out_proj"]), \
+        (state, conv_tail)
+
+
+def rglru_decode(params, x, cache, cfg):
+    """One-token decode.  x: (b, 1, d); cache = (state (b, dr), conv_tail)."""
+    state, conv_tail = cache
+    xb = jnp.einsum("bsd,dr->bsr", x, params["in_x"])
+    gate = jnp.einsum("bsd,dr->bsr", x, params["in_gate"])
+    xb, conv_tail = _causal_conv(xb, params["conv_w"], conv_tail)
+    a, u = _gates(params, xb)
+    h = a[:, 0] * state.astype(jnp.float32) + u[:, 0]
+    out = h[:, None].astype(x.dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsr,rd->bsd", out, params["out_proj"]), \
+        (h, conv_tail)
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    return (jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width), dtype))

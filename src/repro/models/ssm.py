@@ -1,0 +1,205 @@
+"""Mamba2 SSD (state-space duality) block — chunked, matmul-rich form.
+
+The chunked SSD algorithm (Dao & Gu 2024) maps naturally to the MXU:
+intra-chunk terms are (L x L) matmuls, inter-chunk terms a short scan over
+chunk states — the TPU-native way to run an attention-free mixer.
+
+Decode keeps O(1) state: (b, heads, head_dim, n_state) + a small causal-
+conv tail, which is why mamba2 runs the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def ssd_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": L.truncated_normal_init(
+            ks[0], (d, 2 * di + 2 * n + h), 1.0, dtype),
+        "conv_w": (0.1 * jax.random.normal(
+            ks[1], (cfg.conv_width, conv_dim), jnp.float32)).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": L.truncated_normal_init(ks[2], (di, d), 1.0, dtype),
+    }
+
+
+def ssd_axes(cfg, stacked: bool):
+    lead = ("layers",) if stacked else ()
+    return {
+        "in_proj": lead + ("embed", "ssd_in"),
+        "conv_w": lead + (None, "state"),
+        "a_log": lead + (None,),
+        "d_skip": lead + (None,),
+        "dt_bias": lead + (None,),
+        "norm_scale": lead + (None,),
+        "out_proj": lead + ("state", "embed"),
+    }
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv.  x: (b, s, c); w: (width, c).
+
+    With a cache (b, width-1, c) of the previous tail, returns the conv
+    output and the new tail."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(width))
+    new_tail = xp[:, -(width - 1):]
+    return out, new_tail
+
+
+def _segsum(dA):
+    """Stable segment-sum: out[..., l, s] = sum_{s < t <= l} dA[..., t].
+
+    dA: (..., L) -> (..., L, L), lower-triangular meaningful part."""
+    l = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # cs_l - cs_s
+    return diff
+
+
+def ssd_scan(x, dt, a, b, c, chunk: int, init_state=None):
+    """Chunked SSD.  x: (bt, s, h, p); dt: (bt, s, h); a: (h,) > 0 decay
+    rates; b, c: (bt, s, n).  Returns (y (bt, s, h, p), state (bt,h,p,n)).
+    """
+    bt, s, h, p = x.shape
+    n = b.shape[-1]
+    ll = min(chunk, s)
+    pad = (-s) % ll
+    if pad:
+        # zero-dt padding is exact: decay exp(0) = 1, contribution dt*x = 0
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // ll
+    f32 = jnp.float32
+
+    xc = x.reshape(bt, nc, ll, h, p).astype(f32)
+    dtc = dt.reshape(bt, nc, ll, h).astype(f32)
+    bc = b.reshape(bt, nc, ll, n).astype(f32)
+    cc = c.reshape(bt, nc, ll, n).astype(f32)
+    da = -a[None, None, None, :] * dtc  # (bt, nc, L, h), negative
+    cs = jnp.cumsum(da, axis=2)  # inclusive within chunk
+
+    xdt = xc * dtc[..., None]  # (bt, nc, L, h, p)
+
+    # intra-chunk: y[l] += sum_{s<=l} (C_l . B_s) exp(cs_l - cs_s) xdt[s]
+    g = jnp.einsum("bcln,bcsn->bcls", cc, bc)  # (bt, nc, L, L)
+    tri = jnp.tril(jnp.ones((ll, ll), bool))
+    seg = _segsum(jnp.moveaxis(da, -1, 2))  # (bt, nc, h, L, L)
+    # mask BEFORE exp: upper-triangle entries are positive and overflow,
+    # and exp-then-mask leaks NaN through the where in the backward pass
+    decay = jnp.exp(jnp.where(tri, seg, -1e30))
+    m = g[:, :, None] * decay  # (bt, nc, h, L, L)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", m, xdt)
+
+    # chunk states: S_c = sum_s exp(cs_last - cs_s) B_s (x_s dt_s)^T
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # (bt, nc, L, h)
+    sc = jnp.einsum("bcsn,bcsh,bcshp->bchpn", bc, decay_to_end, xdt)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (bt, nc, h)
+
+    def step(state, inp):
+        s_c, dec = inp  # (bt, h, p, n), (bt, h)
+        y_state = state  # state entering this chunk
+        state = state * dec[..., None, None] + s_c
+        return state, y_state
+
+    s0 = (jnp.zeros((bt, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+    state, s_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (bt, nc, h, p, n): state entering c
+
+    # inter-chunk output: y[l] += exp(cs_l) C_l . S_in
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                         cc, jnp.exp(cs), s_in)
+
+    y = (y_intra + y_inter).reshape(bt, s, h, p)
+    return y[:, :s_orig], state
+
+
+def ssd_forward(params, x, cfg, *, init_state=None, conv_cache=None):
+    """Full SSD mixer.  x: (b, s, d) -> (b, s, d), plus (state, conv_tail)."""
+    b, s, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xin, bmat, cmat, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_tail = _causal_conv(conv_in, params["conv_w"], conv_cache)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    a = jnp.exp(params["a_log"])  # (h,) positive rates
+    xh = xin.reshape(b, s, h, p)
+    y, state = ssd_scan(xh, dt, a, bmat, cmat, cfg.ssm_chunk,
+                        init_state=init_state)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    # gated RMSNorm then out-projection (mamba2 ordering)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   params["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, (state, conv_tail)
+
+
+def ssd_decode(params, x, cache, cfg):
+    """One-token decode.  x: (b, 1, d); cache = (state, conv_tail)."""
+    state, conv_tail = cache
+    b = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xin, bmat, cmat, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_tail = _causal_conv(conv_in, params["conv_w"], conv_tail)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])[:, 0]  # (b, h)
+    a = jnp.exp(params["a_log"])
+    dec = jnp.exp(-a[None] * dt)  # (b, h)
+    xh = xin[:, 0].reshape(b, h, p).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    state = state * dec[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32), xdt)
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), state)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   params["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, (state, conv_tail)
+
+
+def init_ssd_cache(cfg, batch: int, dtype):
+    return (jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1,
+                       cfg.d_inner + 2 * cfg.ssm_state), dtype))

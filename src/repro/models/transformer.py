@@ -1,0 +1,159 @@
+"""Layer/stage assembly: pattern-scheduled blocks, scan-over-stages, remat.
+
+A *layer* = temporal mixer (attn | rglru | ssd) + optional MLP (dense or
+MoE).  A *stage* = one repetition of ``cfg.block_pattern``; the model scans
+over ``num_stages`` stacked stages (+ an unstacked remainder, e.g.
+recurrentgemma's 26 = 8 x (R,R,A) + (R,R)).  Scanning keeps the HLO small
+enough that 512-way SPMD partitioning of a 60-layer model compiles fast.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as ATT
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RGL
+from repro.models import ssm as SSD
+
+
+# --- single layer -----------------------------------------------------------
+
+
+def layer_init(key, kind: str, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": L.norm_param(cfg.d_model, cfg.norm_type)}
+    if kind == "attn":
+        p["mixer"] = ATT.attn_init(k1, cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = RGL.rglru_init(k1, cfg, dtype)
+    elif kind == "ssd":
+        p["mixer"] = SSD.ssd_init(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.mlp_type != "none":
+        p["norm2"] = L.norm_param(cfg.d_model, cfg.norm_type)
+        if cfg.num_experts:
+            p["mlp"] = MOE.moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                                  dtype)
+    return p
+
+
+def layer_axes(kind: str, cfg, stacked: bool):
+    lead = ("layers",) if stacked else ()
+    ax: Dict[str, Any] = {"norm1": None if cfg.norm_type == "nonparam_ln"
+                          else lead + (None,)}
+    if kind == "attn":
+        ax["mixer"] = ATT.attn_axes(cfg, stacked)
+    elif kind == "rglru":
+        ax["mixer"] = RGL.rglru_axes(cfg, stacked)
+    elif kind == "ssd":
+        ax["mixer"] = SSD.ssd_axes(cfg, stacked)
+    if cfg.mlp_type != "none":
+        ax["norm2"] = None if cfg.norm_type == "nonparam_ln" \
+            else lead + (None,)
+        if cfg.num_experts:
+            ax["mlp"] = MOE.moe_axes(cfg, stacked)
+        else:
+            ax["mlp"] = L.mlp_axes(cfg.mlp_type, stacked)
+    return ax
+
+
+def layer_forward(params, kind: str, x, positions, cfg):
+    """Full-sequence layer (train / prefill).  Returns (x, mixer_cache, aux)."""
+    h = L.norm(x, params["norm1"], cfg.norm_type)
+    aux = jnp.asarray(0.0, jnp.float32)
+    if kind == "attn":
+        mix, (k, v) = ATT.attn_forward(params["mixer"], h, positions, cfg)
+        cache_out = (k, v)
+    elif kind == "rglru":
+        mix, (state, tail) = RGL.rglru_forward(params["mixer"], h, cfg)
+        cache_out = (state, tail)
+    else:  # ssd
+        mix, (state, tail) = SSD.ssd_forward(params["mixer"], h, cfg)
+        cache_out = (state, tail)
+    x = x + mix
+    if cfg.mlp_type != "none":
+        h2 = L.norm(x, params["norm2"], cfg.norm_type)
+        if cfg.num_experts:
+            mlp_out, aux = MOE.moe_apply(params["mlp"], h2, cfg)
+        else:
+            mlp_out = L.mlp_apply(params["mlp"], h2, cfg.mlp_type)
+        x = x + mlp_out
+    return x, cache_out, aux
+
+
+def layer_decode(params, kind: str, x, pos, cache, cfg):
+    """One-token layer step.  Returns (x, new_cache, aux)."""
+    h = L.norm(x, params["norm1"], cfg.norm_type)
+    if kind == "attn":
+        mix, cache = ATT.attn_decode(params["mixer"], h, pos, cache, cfg)
+    elif kind == "rglru":
+        mix, cache = RGL.rglru_decode(params["mixer"], h, cache, cfg)
+    else:
+        mix, cache = SSD.ssd_decode(params["mixer"], h, cache, cfg)
+    x = x + mix
+    if cfg.mlp_type != "none":
+        h2 = L.norm(x, params["norm2"], cfg.norm_type)
+        if cfg.num_experts:
+            mlp_out, _ = MOE.moe_apply(params["mlp"], h2, cfg)
+        else:
+            mlp_out = L.mlp_apply(params["mlp"], h2, cfg.mlp_type)
+        x = x + mlp_out
+    return x, cache
+
+
+def init_layer_cache(kind: str, cfg, batch: int, max_len: int, dtype):
+    if kind == "attn":
+        return ATT.init_attn_cache(cfg, batch, max_len, dtype)
+    if kind == "rglru":
+        return RGL.init_rglru_cache(cfg, batch, dtype)
+    return SSD.init_ssd_cache(cfg, batch, dtype)
+
+
+def prefill_layer_cache(kind: str, cfg, cache_shape_batch, max_len,
+                        mixer_cache, dtype):
+    """Convert a layer_forward mixer cache into the decode cache format."""
+    if kind == "attn":
+        k, v = mixer_cache
+        empty = ATT.init_attn_cache(cfg, k.shape[0], max_len, dtype)
+        return ATT.attn_fill_cache(empty, k, v, 0)
+    return mixer_cache  # (state, conv_tail) already decode-shaped
+
+
+# --- stages -----------------------------------------------------------------
+
+
+def stage_init(key, cfg, dtype):
+    keys = jax.random.split(key, len(cfg.block_pattern))
+    return tuple(layer_init(k, kind, cfg, dtype)
+                 for k, kind in zip(keys, cfg.block_pattern))
+
+
+def stage_axes(cfg, stacked: bool):
+    return tuple(layer_axes(kind, cfg, stacked)
+                 for kind in cfg.block_pattern)
+
+
+def stage_forward(params, x, positions, cfg):
+    caches, aux = [], jnp.asarray(0.0, jnp.float32)
+    for lp, kind in zip(params, cfg.block_pattern):
+        x, cache, a = layer_forward(lp, kind, x, positions, cfg)
+        caches.append(cache)
+        aux = aux + a
+    return x, tuple(caches), aux
+
+
+def stage_decode(params, x, pos, caches, cfg):
+    new = []
+    for lp, kind, cache in zip(params, cfg.block_pattern, caches):
+        x, c = layer_decode(lp, kind, x, pos, cache, cfg)
+        new.append(c)
+    return x, tuple(new)

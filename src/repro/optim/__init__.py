@@ -1,0 +1,10 @@
+"""Optimizers: ZoloMuon (the paper's PD inside the train step) + AdamW."""
+
+from repro.optim.compression import (
+    compress_decompress,
+    compressed_psum,
+    init_compression_state,
+    lowrank_factor,
+)
+from repro.optim.muon import MuonConfig, ZoloMuon, muon_labels, orthogonalize
+from repro.optim.schedule import warmup_cosine

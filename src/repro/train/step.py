@@ -1,0 +1,156 @@
+"""Compiled train step: loss -> grads -> clip -> ZoloMuon update.
+
+The cross-entropy is computed in sequence chunks against the (possibly
+model-axis-sharded) vocabulary projection so full (b, s, vocab) logits are
+never materialized — required for 256k vocabularies at seq 4k.
+
+The paper's technique runs *inside* this step: every 2-D weight's update
+is orthogonalized by Zolo-PD (repro.optim.muon).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import hint_tree
+from repro.models import model as M
+from repro.optim.muon import MuonConfig, ZoloMuon, muon_labels
+from repro.optim.schedule import warmup_cosine
+
+
+@dataclasses.dataclass
+class TrainState:
+    step: Any
+    params: Any
+    opt: Any
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.step, s.params, s.opt), None),
+    lambda aux, ch: TrainState(*ch))
+
+
+def train_state_axes(cfg):
+    """Logical axes for the full train state (params + optimizer mirrors).
+
+    Note: ``nu`` mirrors params *structurally*, but Muon-labelled leaves
+    hold scalar placeholders — axes for those leaves are overridden to ()
+    by the dry-run/launcher helpers via :func:`state_axes_for_params`.
+    """
+    pax = M.params_axes(cfg)
+    rep = "REPLICATED"
+    return TrainState(step=rep, params=pax,
+                      opt={"mu": pax, "nu": pax, "count": rep})
+
+
+def state_axes_for_params(cfg, params_or_abstract):
+    """train_state_axes with nu-axes fixed up to match actual leaf ranks
+    (scalar placeholders on Muon leaves get ())."""
+    axes = train_state_axes(cfg)
+    labels = muon_labels(params_or_abstract)
+    nu_axes = jax.tree.map(
+        lambda is_muon, ax: "REPLICATED" if is_muon else ax,
+        labels, axes.opt["mu"])
+    axes.opt["nu"] = nu_axes
+    return axes
+
+
+def chunked_ce_loss(x, w, labels, *, chunk: int = 512,
+                    softcap: float = 0.0, z_loss: float = 1e-4):
+    """Cross entropy over seq chunks.  x: (b, s, d); w: (d, v);
+    labels: (b, s) int32 (-1 = masked)."""
+    b, s, d = x.shape
+    nc = max(1, -(-s // chunk))
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = x.reshape(b, nc, -1, d)
+    lc = labels.reshape(b, nc, -1)
+
+    # python-unrolled chunk loop: nc is small (s/512) and unrolling keeps
+    # XLA cost analysis honest (scan bodies are costed once, not x trips)
+    tot = jnp.float32(0)
+    cnt = jnp.float32(0)
+    for i in range(nc):
+        xs = xc[:, i]
+        ls = lc[:, i]
+        logits = jnp.einsum("bld,dv->blv", xs, w).astype(jnp.float32)
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[..., None], axis=-1)[..., 0]
+        mask = (ls >= 0).astype(jnp.float32)
+        nll = (logz - gold + z_loss * logz * logz) * mask
+        tot = tot + nll.sum()
+        cnt = cnt + mask.sum()
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_train_step(cfg, muon_cfg: MuonConfig, *,
+                    total_steps: int = 10_000, warmup: int = 100,
+                    grad_clip: float = 1.0, aux_weight: float = 0.01,
+                    schedule: Optional[Callable] = None):
+    """Returns (init_state_fn(key), train_step(state, batch) -> (state,
+    metrics)).  Optimizer labels are built lazily from abstract params."""
+
+    sched = schedule or functools.partial(
+        warmup_cosine, warmup=warmup, total=total_steps)
+
+    def init_state(key):
+        params = M.init_params(cfg, key)
+        params = jax.tree.map(
+            lambda p: p.astype(jnp.float32) if p.dtype == jnp.bfloat16
+            else p, params)  # f32 masters
+        opt = ZoloMuon(muon_cfg, muon_labels(params))
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt=opt.init(params))
+
+    def train_step(state, batch):
+        compute_dtype = jnp.dtype(cfg.dtype)
+
+        def loss_fn(params):
+            cast = jax.tree.map(
+                lambda p: p.astype(compute_dtype)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+            # pin the bf16 copies to the master sharding: FSDP all-gathers
+            # then move half the bytes (bf16, not f32)
+            cast = hint_tree(cast, M.params_axes(cfg))
+            x, aux = M.hidden_states(cast, batch, cfg)
+            w = cast["embed"].T if cfg.tie_embeddings else cast["lm_head"]
+            p = cfg.num_prefix_embeds
+            toks = batch["tokens"]
+            x_pred = x[:, p:p + toks.shape[1] - 1]
+            labels = toks[:, 1:]
+            loss = chunked_ce_loss(x_pred, w, labels,
+                                   softcap=cfg.logits_softcap)
+            return loss + aux_weight * aux, (loss, aux)
+
+        grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(state.params)
+        # under activation hints: pin grads to the param sharding, so the
+        # data-parallel reduction lowers as reduce-scatter (ZeRO-2 shape)
+        # instead of all-reduce + local slice
+        grads = hint_tree(grads, M.params_axes(cfg))
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        clip = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * clip.astype(g.dtype), grads)
+
+        opt = ZoloMuon(muon_cfg, muon_labels(state.params))
+        lr_scale = sched(state.step)
+        params, opt_state = opt.update(grads, state.opt, state.params,
+                                       lr_scale=lr_scale)
+        new_state = TrainState(step=state.step + 1, params=params,
+                               opt=opt_state)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm,
+                   "lr_scale": lr_scale}
+        return new_state, metrics
+
+    return init_state, train_step

@@ -1,0 +1,29 @@
+import os
+
+# Core numerics (Zolotarev coefficients, ill-conditioned PD) are validated
+# in f64.  Model code pins its dtypes explicitly, so enabling x64 here is
+# safe.  NOTE: device count stays 1 — only launch/dryrun.py forces 512.
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+def make_matrix(m, n, kappa, dtype=jnp.float64, seed=0, spectrum="geom"):
+    """Random matrix with exact kappa_2 (geometric spectrum, Haar U/V)."""
+    rng = np.random.default_rng(seed)
+    k = min(m, n)
+    u, _ = np.linalg.qr(rng.standard_normal((m, k)))
+    v, _ = np.linalg.qr(rng.standard_normal((n, k)))
+    if spectrum == "geom":
+        s = np.geomspace(1.0, 1.0 / kappa, k)
+    else:
+        s = np.linspace(1.0, 1.0 / kappa, k)
+    return jnp.asarray(u @ np.diag(s) @ v.T, dtype=dtype)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,55 @@
+"""Elliptic functions vs scipy (the Zolotarev coefficient substrate)."""
+
+import numpy as np
+import pytest
+import scipy.special as sp
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+from repro.core import elliptic as el
+
+
+@given(st.floats(min_value=1e-6, max_value=0.999))
+@settings(max_examples=20, deadline=None)
+def test_ellipk_vs_scipy(l):
+    mc = l * l
+    ref = sp.ellipkm1(mc)
+    got = float(el.ellipk_mc(jnp.float64(mc)))
+    assert abs(got - ref) / ref < 1e-13
+
+
+@given(st.floats(min_value=1e-6, max_value=0.95),
+       st.floats(min_value=0.05, max_value=0.95))
+@settings(max_examples=20, deadline=None)
+def test_ellipj_vs_scipy(l, frac):
+    mc = l * l
+    m = 1.0 - mc
+    kp = sp.ellipkm1(mc)
+    u = frac * kp
+    sn_r, cn_r, dn_r, _ = sp.ellipj(u, m)
+    sn, cn, dn = el.ellipj_mc(jnp.float64(u), jnp.float64(mc))
+    assert abs(float(sn) - sn_r) < 5e-11
+    assert abs(float(cn) - cn_r) < 5e-11
+    assert abs(float(dn) - dn_r) < 5e-11
+
+
+def test_extreme_modulus_degenerates_to_tanh():
+    # kappa = 1e12 regime: m -> 1, sn -> tanh, cn -> sech
+    l = 1e-12
+    mc = l * l
+    kp = float(el.ellipk_mc(jnp.float64(mc)))
+    for frac in (0.1, 0.5, 0.9):
+        u = frac * kp
+        sn, cn, _ = el.ellipj_mc(jnp.float64(u), jnp.float64(mc))
+        assert abs(float(sn) - np.tanh(u)) < 5e-8
+        assert abs(float(cn) - 1.0 / np.cosh(u)) < 5e-8
+
+
+def test_pythagorean_identity():
+    for l in (1e-8, 1e-4, 0.3, 0.9):
+        mc = l * l
+        kp = float(el.ellipk_mc(jnp.float64(mc)))
+        u = jnp.linspace(0.05, 0.95, 7) * kp
+        sn, cn, dn = el.ellipj_mc(u, jnp.float64(mc))
+        np.testing.assert_allclose(np.asarray(sn) ** 2 + np.asarray(cn) ** 2,
+                                   1.0, atol=1e-12)

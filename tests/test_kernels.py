@@ -1,0 +1,96 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps (interpret mode)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,n", [(256, 256), (300, 130), (512, 384),
+                                 (128, 640), (64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_kernel(m, n, dtype, rng):
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    c = 0.73
+    got = ops.gram(a, c)
+    want = ref.gram_ref(a, c)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("m,k,n", [(256, 512, 256), (130, 70, 200),
+                                   (64, 128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel(m, k, n, dtype, rng):
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    got = ops.matmul(a, b, alpha=1.5)
+    want = ref.matmul_ref(a, b, alpha=1.5)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol * np.sqrt(k), rtol=tol)
+
+
+@pytest.mark.parametrize("r", [1, 2, 3, 5, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_polar_update_kernel(r, dtype, rng):
+    x = jnp.asarray(rng.standard_normal((160, 200)), dtype)
+    t = jnp.asarray(rng.standard_normal((r, 160, 200)), dtype)
+    a = jnp.asarray(rng.standard_normal(r), jnp.float32)
+    got = ops.polar_update(x, t, a, 0.987)
+    want = ref.polar_update_ref(x, t, a, 0.987)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol * r, rtol=tol * r)
+
+
+def test_gram_kernel_in_zolo_context(rng):
+    """Kernel output is good enough to drive a full Zolo iteration."""
+    import repro.core as C
+    a = jnp.asarray(rng.standard_normal((128, 96)), jnp.float32)
+    a = a / C.sigma_max_upper(a)
+    g_kernel = ops.gram(a, 1e-3)
+    g_ref = ref.gram_ref(a, 1e-3)
+    l_k = jnp.linalg.cholesky(g_kernel)
+    l_r = jnp.linalg.cholesky(g_ref)
+    assert bool(jnp.all(jnp.isfinite(l_k)))
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_r), atol=1e-3)
+
+
+@pytest.mark.parametrize("s,bq,bk", [(128, 64, 64), (256, 128, 64),
+                                     (192, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(s, bq, bk, dtype, rng):
+    from repro.kernels.flash_attention import flash_attention_kernel_call
+    b, h, d = 2, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    got = ops.flash_attention(q, k, v, bq=bq, bk=bk)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_matches_model_attention(rng):
+    """Kernel vs the pure-JAX chunked flash used by the model stack."""
+    from repro.models.attention import flash_attention as model_flash
+    b, s, kv, g, d = 1, 128, 2, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, kv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    pos = jnp.arange(s)
+    want = model_flash(q, k, v, pos, pos, q_chunk=64, kv_chunk=64)
+    # expand GQA and run the kernel
+    qe = q.reshape(b, s, kv * g, d)
+    ke = jnp.repeat(k, g, axis=2)
+    ve = jnp.repeat(v, g, axis=2)
+    got = ops.flash_attention(qe, ke, ve, bq=64, bk=64)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want.reshape(b, s, kv * g, d)),
+                               atol=5e-5, rtol=5e-5)

@@ -1,0 +1,117 @@
+"""Required per-arch smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes and no NaNs."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from repro import configs as CFG
+from repro import models as M
+from repro.data.pipeline import SyntheticLM
+from repro.models.config import SHAPES, ShapeConfig
+from repro.optim.muon import MuonConfig
+from repro.train.step import make_train_step
+
+ARCHS = CFG.list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = CFG.get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    shape = ShapeConfig("smoke", "train", 64, 2)
+    batch = CFG.input_specs(cfg, shape, abstract=False)
+    logits, aux = M.forward(params, batch, cfg)
+    assert logits.shape == (2, 64, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = CFG.get_smoke_config(arch)
+    init_fn, step_fn = make_train_step(cfg, MuonConfig(lr=0.01))
+    state = init_fn(jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg.vocab_size, 64, 2,
+                       num_prefix_embeds=cfg.num_prefix_embeds,
+                       d_model=cfg.d_model, dtype=cfg.dtype)
+    jstep = jax.jit(step_fn)
+    state, metrics = jstep(state, data.batch_at(0))
+    assert int(state.step) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    state, metrics2 = jstep(state, data.batch_at(1))
+    assert np.isfinite(float(metrics2["loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    cfg = CFG.get_smoke_config(arch)
+    if cfg.num_experts:
+        # capacity dropping depends on batch composition; disable drops
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.num_experts))
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 32
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 1)),
+                       jnp.int32)
+    batch = {"tokens": toks[:, :s]}
+    if cfg.num_prefix_embeds:
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.num_prefix_embeds, cfg.d_model)),
+            jnp.float32)
+    logits_pre, caches = M.prefill(params, batch, cfg, max_len=128)
+    logits_dec, _ = M.decode_step(params, toks[:, s:s + 1], caches, cfg)
+    full = dict(batch)
+    full["tokens"] = toks
+    logits_full, _ = M.forward(params, full, cfg)
+    p = cfg.num_prefix_embeds
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(logits_full[:, s - 1 + p]),
+                               atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, s + p]),
+                               atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "recurrentgemma-2b",
+                                  "h2o-danube-3-4b"])
+def test_subquadratic_flag(arch):
+    assert CFG.get_config(arch).sub_quadratic
+
+
+@pytest.mark.parametrize("arch", ["yi-34b", "qwen3-8b", "dbrx-132b",
+                                  "musicgen-large", "pixtral-12b"])
+def test_full_attention_skips_long(arch):
+    cfg = CFG.get_config(arch)
+    assert not cfg.sub_quadratic
+    assert CFG.registry.cell_supported(cfg, SHAPES["long_500k"]) is not None
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    }
+    for arch, (nl, d, h, kv, ff, v) in spec.items():
+        c = CFG.get_config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (nl, d, h, kv, ff, v), arch
+    m = CFG.get_config("mamba2-130m")
+    assert (m.num_layers, m.d_model, m.vocab_size, m.ssm_state) == \
+        (24, 768, 50280, 128)
+    assert CFG.get_config("moonshot-v1-16b-a3b").num_experts == 64
+    assert CFG.get_config("moonshot-v1-16b-a3b").moe_top_k == 6
+    assert CFG.get_config("dbrx-132b").num_experts == 16
+    assert CFG.get_config("dbrx-132b").moe_top_k == 4

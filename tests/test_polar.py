@@ -1,0 +1,123 @@
+"""Polar decomposition invariants across methods and conditioning."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+import repro.core as C
+
+from conftest import make_matrix
+
+
+def _check(a, q, h, orth_tol, rec_tol):
+    n = a.shape[-1]
+    orth = float(C.orthogonality(q))
+    rec = float(jnp.linalg.norm(q @ h - a) / jnp.linalg.norm(a))
+    assert orth < orth_tol, orth
+    assert rec < rec_tol, rec
+    # H symmetric PSD (up to rounding)
+    assert float(jnp.abs(h - h.T).max()) < 1e-12
+    w = np.linalg.eigvalsh(np.asarray(h))
+    assert w.min() > -1e-10
+
+
+@pytest.mark.parametrize("kappa", [1.3, 14.0, 9.06e3, 1e7, 3.46e11])
+@pytest.mark.parametrize("method", ["zolo", "qdwh"])
+def test_pd_invariants(kappa, method):
+    a = make_matrix(120, 80, kappa, seed=3)
+    q, h, info = C.polar_decompose(a, method=method, want_h=True)
+    _check(a, q, h, 1e-13, 5e-13)
+
+
+def test_iteration_counts_match_theory_and_paper():
+    """With exact (alpha, l) the dynamic driver stops at the Table-1
+    theoretical count; the paper's measured Table 5 (3/4 iterations for
+    these matrices) reflects loose runtime estimates and is reproduced by
+    the estimate-everything mode within +1 iteration."""
+    from repro.core import coeffs as CF
+    for kappa in (1.29, 14.0, 9.06e3):
+        a = make_matrix(160, 120, kappa, seed=11)
+        for r in (2, 3, 4):
+            theory = CF.zolo_iter_count(kappa / 0.9, r)
+            q, _, info = C.zolo_pd(a, r=r, alpha=1.0, l=0.9 / kappa,
+                                   want_h=False)
+            # residual stopping (the paper's own rule) = theory or +1,
+            # exactly the relationship between its Tables 1 and 5/10
+            assert theory <= int(info.iterations) <= theory + 1, (kappa, r)
+            assert float(C.orthogonality(q)) < 1e-13
+            q2, _, info2 = C.zolo_pd(a, r=r, want_h=False)  # estimates
+            assert theory <= int(info2.iterations) <= theory + 2
+            assert float(C.orthogonality(q2)) < 1e-13
+
+
+def test_iteration_counts_match_paper_table10():
+    """bcsstk18-class (kappa 3.46e11): paper Table 10 r=2 -> 4, r=4 -> 3
+    (these match Table-1 theory exactly at this conditioning)."""
+    a = make_matrix(160, 120, 3.46e11, seed=13)
+    for r, iters in {2: 4, 4: 3}.items():
+        q, _, info = C.zolo_pd(a, r=r, alpha=1.0, l=0.9 / 3.46e11,
+                               want_h=False)
+        assert int(info.iterations) == iters
+
+
+def test_qdwh_iterations_bounded():
+    a = make_matrix(120, 80, 1e16, seed=5)
+    q, _, info = C.qdwh_pd(a, alpha=1.0, l=0.9e-16, want_h=False)
+    # theory says 6; the residual stopping rule confirms with up to two
+    # extra cheap Cholesky iterations
+    assert int(info.iterations) <= 8
+    assert float(C.orthogonality(q)) < 1e-13
+
+
+def test_static_matches_dynamic():
+    kappa = 1e4
+    a = make_matrix(96, 64, kappa, seed=9)
+    q_dyn, _, _ = C.zolo_pd(a, r=2, alpha=1.0, l=0.9 / kappa, want_h=False)
+    q_st, _, _ = C.zolo_pd_static(a, l0=0.9 / kappa, r=2, want_h=False)
+    # both are converged polar factors; they may stop at different
+    # iteration counts, so agreement is at the residual level
+    assert float(jnp.abs(q_dyn - q_st).max()) < 5e-8
+    assert float(C.orthogonality(q_dyn)) < 1e-13
+    assert float(C.orthogonality(q_st)) < 1e-13
+
+
+def test_first_mode_variants_agree():
+    kappa = 1e5
+    a = make_matrix(100, 64, kappa, seed=2)
+    qs = {}
+    for mode in ("cholqr2", "householder"):
+        q, _, _ = C.zolo_pd(a, r=3, alpha=1.0, l=0.9 / kappa,
+                            first_mode=mode, want_h=False)
+        qs[mode] = q
+        assert float(C.orthogonality(q)) < 1e-13
+    assert float(jnp.abs(qs["cholqr2"] - qs["householder"]).max()) < 1e-9
+
+
+def test_newton_square():
+    a = make_matrix(90, 90, 1e6, seed=4)
+    q, h, info = C.scaled_newton_pd(a)
+    _check(a, q, h, 1e-13, 1e-12)
+
+
+def test_wide_matrix_canonicalization():
+    a = make_matrix(60, 100, 30.0, seed=8)
+    q, _, _ = C.polar_decompose(a, method="qdwh", want_h=False)
+    # polar factor of a wide matrix has orthonormal ROWS
+    g = q @ q.T
+    assert float(jnp.abs(g - jnp.eye(60)).max()) < 1e-13
+
+
+@given(st.integers(min_value=3, max_value=10),
+       st.integers(min_value=1, max_value=8),
+       st.floats(min_value=1.0, max_value=8.0))
+@settings(max_examples=6, deadline=None)
+def test_property_polar(m8, n8, logk):
+    m, n = 8 * m8 + 8, 8 * n8
+    if n > m:
+        m, n = n, m + 8
+    kappa = 10.0 ** logk
+    a = make_matrix(m, n, kappa, seed=m8 * 13 + n8)
+    q, h, _ = C.zolo_pd(a, r=2, want_h=True)
+    assert float(C.orthogonality(q)) < 1e-12
+    assert float(jnp.linalg.norm(q @ h - a) / jnp.linalg.norm(a)) < 1e-11
