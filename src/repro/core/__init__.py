@@ -19,6 +19,16 @@ from repro.core.norms import (
     sigma_min_lower,
 )
 from repro.core.qdwh import PolarInfo, form_h, qdwh_pd, qdwh_pd_static
+from repro.core.registry import (
+    EigSpec,
+    PolarSpec,
+    get_eig,
+    get_polar,
+    list_eig,
+    list_polar,
+    register_eig,
+    register_polar,
+)
 from repro.core.structured_qr import (
     dense_stacked_qr_q1q2,
     structured_qr_factor,

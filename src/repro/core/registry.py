@@ -1,0 +1,134 @@
+"""Solver registry: polar-decomposition and eigensolver backends.
+
+``repro.core.svd`` dispatches *only* through this table — there is one
+code path from ``polar_decompose`` / ``polar_svd`` down to a backend, and
+a new solver (a Pallas kernel, a distributed variant, a debugging oracle)
+plugs in with a decorator instead of another ``elif``:
+
+    @register_polar("my_solver")
+    def my_solver(a, **kw):
+        ...
+        return q, h_or_none, info
+
+Backend contract: ``fn(a, **kw) -> (q, h | None, info)`` for an ``a``
+already in canonical (m >= n) orientation; ``polar_svd`` passes
+``want_h=True`` through ``kw``.  A spec with ``supports_grouped`` also
+carries ``grouped_fn(a, *, mesh, **kw)`` routing the same contract
+through r-process-group execution (paper Algorithm 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class PolarSpec:
+    """One registered polar-decomposition backend and its capabilities."""
+
+    name: str
+    fn: Callable
+    # capability flags — the dispatcher consults these, never the name
+    supports_grouped: bool = False  # can run over a ("zolo","sep") mesh
+    requires_mesh: bool = False     # grouped-only backend: mesh= mandatory
+    dynamic: bool = False           # runtime conditioning (while_loop)
+    is_oracle: bool = False         # reference/debug path, not a solver
+    grouped_fn: Optional[Callable] = None
+    description: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class EigSpec:
+    """One registered symmetric eigensolver backend (the ELPA role)."""
+
+    name: str
+    fn: Callable  # fn(h, **kw) -> (w ascending, v)
+    description: str = ""
+
+
+_POLAR: Dict[str, PolarSpec] = {}
+_EIG: Dict[str, EigSpec] = {}
+
+
+def _same_origin(old: Callable, new: Callable) -> bool:
+    """True when ``new`` is the same function re-created, e.g. by an
+    importlib.reload of its defining module — re-registration is then a
+    benign replacement, not a name collision.  Lambdas are never treated
+    as same-origin: their shared ``<lambda>`` qualname would let two
+    distinct implementations silently shadow each other."""
+    qualname = getattr(new, "__qualname__", None)
+    if qualname is None or "<lambda>" in qualname:
+        return False
+    return (getattr(old, "__module__", None) == getattr(new, "__module__", 0)
+            and getattr(old, "__qualname__", None) == qualname)
+
+
+def register_polar(name: str, *, supports_grouped: bool = False,
+                   requires_mesh: bool = False, dynamic: bool = False,
+                   is_oracle: bool = False, grouped_fn: Callable = None,
+                   description: str = ""):
+    """Decorator registering ``fn(a, **kw) -> (q, h, info)`` under ``name``."""
+
+    def deco(fn):
+        if name in _POLAR and not _same_origin(_POLAR[name].fn, fn):
+            raise ValueError(f"polar solver {name!r} already registered")
+        if supports_grouped and grouped_fn is None:
+            raise ValueError(f"polar solver {name!r}: supports_grouped "
+                             f"requires a grouped_fn")
+        if requires_mesh and not supports_grouped:
+            raise ValueError(f"polar solver {name!r}: requires_mesh without "
+                             f"supports_grouped is unsatisfiable")
+        _POLAR[name] = PolarSpec(
+            name=name, fn=fn, supports_grouped=supports_grouped,
+            requires_mesh=requires_mesh, dynamic=dynamic,
+            is_oracle=is_oracle, grouped_fn=grouped_fn,
+            description=description)
+        return fn
+
+    return deco
+
+
+def register_eig(name: str, *, description: str = ""):
+    """Decorator registering ``fn(h, **kw) -> (w, v)`` under ``name``."""
+
+    def deco(fn):
+        if name in _EIG and not _same_origin(_EIG[name].fn, fn):
+            raise ValueError(f"eig solver {name!r} already registered")
+        _EIG[name] = EigSpec(name=name, fn=fn, description=description)
+        return fn
+
+    return deco
+
+
+def get_polar(name: str) -> PolarSpec:
+    try:
+        return _POLAR[name]
+    except KeyError:
+        raise ValueError(f"unknown polar method: {name!r} "
+                         f"(registered: {sorted(_POLAR)})") from None
+
+
+def get_eig(name: str) -> EigSpec:
+    try:
+        return _EIG[name]
+    except KeyError:
+        raise ValueError(f"unknown eig method: {name!r} "
+                         f"(registered: {sorted(_EIG)})") from None
+
+
+def list_polar() -> list:
+    return sorted(_POLAR)
+
+
+def list_eig() -> list:
+    return sorted(_EIG)
+
+
+def unregister_polar(name: str) -> None:
+    """Remove a registration (tests / interactive reload)."""
+    _POLAR.pop(name, None)
+
+
+def unregister_eig(name: str) -> None:
+    _EIG.pop(name, None)

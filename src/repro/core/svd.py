@@ -22,63 +22,129 @@ from repro.core import eig as _eig
 from repro.core import newton as _newton
 from repro.core import norms as _norms
 from repro.core import qdwh as _qdwh
+from repro.core import registry as _registry
 from repro.core import zolo as _zolo
+from repro.core.registry import register_eig, register_polar
 
 
-def polar_decompose(a, method: str = "zolo", **kw):
-    """Unified polar decomposition dispatcher.  Returns (q, h, info)."""
+# --- backend registrations --------------------------------------------------
+# Every solver reaches polar_decompose / polar_svd through the registry
+# below; there is no other dispatch.  New backends (Pallas kernels,
+# alternative distributed schemes) register here or in their own module.
+
+
+def _grouped_zolo_adapter(a, *, mesh, l0=None, r=None, want_h: bool = False,
+                          hermitian_source=None, **kw):
+    """Route the (q, h, info) contract through Algorithm-3 grouped
+    execution, accepting the same kwargs as ``zolo_pd_static``.
+    Imported lazily: core must not depend on repro.dist."""
+    from repro.dist import grouped as _grouped
+
+    if l0 is None:
+        raise ValueError("grouped zolo execution needs a static l0=")
+    q, info = _grouped.grouped_zolo_pd_static(a, mesh=mesh, l0=l0, r=r,
+                                              return_info=True, **kw)
+    src = a if hermitian_source is None else hermitian_source
+    h = _qdwh.form_h(q, src) if want_h else None
+    return q, h, info
+
+
+register_polar("zolo", dynamic=True,
+               description="dynamic Zolo-PD, in-graph coefficients")(
+    _zolo.zolo_pd)
+register_polar("zolo_static", supports_grouped=True,
+               grouped_fn=_grouped_zolo_adapter,
+               description="trace-time Zolo-PD schedule")(
+    _zolo.zolo_pd_static)
+register_polar("zolo_grouped", supports_grouped=True, requires_mesh=True,
+               grouped_fn=_grouped_zolo_adapter,
+               description="paper Alg. 3: one Zolotarev term per group")(
+    _grouped_zolo_adapter)
+register_polar("qdwh", dynamic=True,
+               description="dynamic QDWH-PD baseline")(_qdwh.qdwh_pd)
+register_polar("qdwh_static",
+               description="trace-time QDWH-PD schedule")(
+    _qdwh.qdwh_pd_static)
+register_polar("newton", dynamic=True,
+               description="scaled Newton PD baseline")(
+    _newton.scaled_newton_pd)
+
+
+@register_polar("svd", is_oracle=True,
+                description="jnp.linalg.svd oracle (PDGESVD role)")
+def _svd_oracle_polar(a, *, want_h: bool = True, **_):
+    u, s, vh = jnp.linalg.svd(a, full_matrices=False)
+    q = u @ vh
+    h = (vh.swapaxes(-1, -2) * s[..., None, :]) @ vh if want_h else None
+    info = _qdwh.PolarInfo(jnp.int32(0), jnp.asarray(0.0, a.dtype),
+                           jnp.asarray(1.0, jnp.float32))
+    return q, h, info
+
+
+@register_eig("eigh", description="LAPACK/XLA symmetric eigensolver")
+def _eigh_backend(h, **_):
+    return _eig.eigh(h)
+
+
+@register_eig("jacobi", description="padded block-Jacobi (ELPA role)")
+def _jacobi_backend(h, *, nb: int = 32, **_):
+    return _eig.padded_block_jacobi_eigh(h, nb=nb)
+
+
+def _dispatch_polar(a_work, method: str, mesh=None, **kw):
+    """THE polar dispatch path — registry lookup + capability routing.
+
+    ``a_work`` must already be canonical (m >= n).  Passing ``mesh=``
+    routes to the backend's grouped (Algorithm 3) execution; backends
+    without that capability reject it loudly.
+    """
+    spec = _registry.get_polar(method)
+    if mesh is not None:
+        if not spec.supports_grouped:
+            raise ValueError(
+                f"polar method {method!r} does not support grouped "
+                f"(mesh=) execution; grouped-capable methods: "
+                f"{[n for n in _registry.list_polar() if _registry.get_polar(n).supports_grouped]}")
+        return spec.grouped_fn(a_work, mesh=mesh, **kw)
+    if spec.requires_mesh:
+        raise ValueError(f"polar method {method!r} runs grouped only; "
+                         f"pass mesh=zolo_group_mesh(r)")
+    return spec.fn(a_work, **kw)
+
+
+def polar_decompose(a, method: str = "zolo", *, mesh=None, **kw):
+    """Unified polar decomposition.  Returns (q, h, info) with A ~= Q H.
+
+    H (when requested by the backend's ``want_h``) is always the *right*
+    polar factor, square with trailing dim n = a.shape[-1]: for m < n
+    inputs the canonical factorization A^T = Q_w H_w is re-oriented via
+    H = Q_w H_w Q_w^T, so A = Q H holds in every orientation.
+    """
     a_work, transposed = _zolo.polar_canonical(a)
-    if method == "zolo":
-        q, h, info = _zolo.zolo_pd(a_work, **kw)
-    elif method == "zolo_static":
-        q, h, info = _zolo.zolo_pd_static(a_work, **kw)
-    elif method == "qdwh":
-        q, h, info = _qdwh.qdwh_pd(a_work, **kw)
-    elif method == "qdwh_static":
-        q, h, info = _qdwh.qdwh_pd_static(a_work, **kw)
-    elif method == "newton":
-        q, h, info = _newton.scaled_newton_pd(a_work, **kw)
-    elif method == "svd":  # oracle
-        u, s, vh = jnp.linalg.svd(a_work, full_matrices=False)
-        q = u @ vh
-        h = (vh.swapaxes(-1, -2) * s[..., None, :]) @ vh
-        info = _qdwh.PolarInfo(jnp.int32(0), jnp.asarray(0.0, a.dtype),
-                               jnp.asarray(1.0, jnp.float32))
-    else:
-        raise ValueError(f"unknown polar method: {method}")
+    q, h, info = _dispatch_polar(a_work, method, mesh=mesh, **kw)
     if transposed:
+        if h is not None:
+            # A = (Q_w H_w)^T = H_w Q_w^T; right factor H = Q_w H_w Q_w^T
+            # satisfies A = (Q_w^T) H with H (n, n) symmetric PSD.
+            h = jnp.einsum("...ik,...kl,...jl->...ij", q, h, q)
         q = jnp.swapaxes(q, -1, -2)
-        # For A (m < n): A = Q H_right with H_right acting on the right;
-        # callers that need H for the SVD use the canonical orientation.
     return q, h, info
 
 
 def polar_svd(a, method: str = "zolo", eig_method: str = "eigh",
-              nb: int = 32, **kw):
+              nb: int = 32, *, mesh=None, **kw):
     """SVD A = U diag(s) V^H via PD + EIG (paper Alg. 2).
 
     Returns (u, s, vh) with s descending — drop-in for
-    ``jnp.linalg.svd(a, full_matrices=False)``.
+    ``jnp.linalg.svd(a, full_matrices=False)``.  ``mesh=`` routes the
+    polar stage through grouped (Algorithm 3) execution for methods
+    whose registry spec advertises ``supports_grouped``.
     """
+    eig_spec = _registry.get_eig(eig_method)  # fail fast on typos
     a_work, transposed = _zolo.polar_canonical(a)
     kw.setdefault("want_h", True)
-    if method == "zolo":
-        q, h, _ = _zolo.zolo_pd(a_work, **kw)
-    elif method == "zolo_static":
-        q, h, _ = _zolo.zolo_pd_static(a_work, **kw)
-    elif method == "qdwh":
-        q, h, _ = _qdwh.qdwh_pd(a_work, **kw)
-    elif method == "newton":
-        q, h, _ = _newton.scaled_newton_pd(a_work, **kw)
-    else:
-        raise ValueError(f"unknown polar method: {method}")
-
-    if eig_method == "eigh":
-        w, v = _eig.eigh(h)
-    elif eig_method == "jacobi":
-        w, v = _eig.padded_block_jacobi_eigh(h, nb=nb)
-    else:
-        raise ValueError(f"unknown eig method: {eig_method}")
+    q, h, _ = _dispatch_polar(a_work, method, mesh=mesh, **kw)
+    w, v = eig_spec.fn(h, nb=nb)
 
     u = jnp.einsum("...mk,...kn->...mn", q, v)
     # ascending -> descending; fold any tiny negative eigenvalue's sign
@@ -93,7 +159,7 @@ def polar_svd(a, method: str = "zolo", eig_method: str = "eigh",
     vh = jnp.swapaxes(v, -1, -2)
     if transposed:
         # a = (u s vh)^T = v s u^T
-        return vh.swapaxes(-1, -2) * 1.0, s, jnp.swapaxes(u, -1, -2)
+        return vh.swapaxes(-1, -2), s, jnp.swapaxes(u, -1, -2)
     return u, s, vh
 
 

@@ -63,25 +63,34 @@ def _chol_terms(x, c_odd, gram=None):
     return w  # (r, n, m)
 
 
+def term_sum_chol(x, c_odd, a, gram=None):
+    """sum_j a_j X (X^T X + c_{2j-1} I)^{-1} over the given (possibly
+    partial) odd-coefficient slice — the Cholesky-variant Zolotarev term.
+
+    Shared by the single-address-space batched drivers below and by the
+    per-group bodies of :mod:`repro.dist.grouped` (where each process
+    group holds a length-1 slice of ``c_odd`` / ``a``)."""
+    w = _chol_terms(x, c_odd, gram=gram)
+    return jnp.einsum("j,jnm->mn", a.astype(x.dtype), w)
+
+
 def _zolo_iter_chol(x, c, a, mhat):
     """One Cholesky-variant Zolotarev iteration (Alg. 1 step 4d)."""
-    c_odd = c[0::2]
-    w = _chol_terms(x, c_odd)
-    t = jnp.einsum("j,jnm->mn", a.astype(x.dtype), w)
+    t = term_sum_chol(x, c[0::2], a)
     return mhat.astype(x.dtype) * (x + t)
 
 
-def _zolo_iter_cholqr2(x, c, a, mhat):
-    """Inverse-free iteration via shifted CholeskyQR2 (eq. 12 analogue).
+def term_sum_cholqr2(x, c_odd, a):
+    """sum_j (a_j / sqrt(c_j)) Q1_j Q2_j^T via shifted CholeskyQR2
+    (eq. 12 analogue) over the given odd-coefficient slice.
 
     Q1_j = X R_j^{-1}, Q2_j = sqrt(c_j) R_j^{-1} with R_j from a two-pass
-    shifted Cholesky QR of [X; sqrt(c_j) I]; then
-    T_j = (a_j / sqrt(c_j)) Q1_j Q2_j^T.  Explicit Q (paper's MPDORGQR role)
-    keeps the term stable for much smaller c_j than a single Cholesky.
-    """
+    shifted Cholesky QR of [X; sqrt(c_j) I].  Explicit Q (paper's MPDORGQR
+    role) keeps the term stable for much smaller c_j than a single
+    Cholesky.  Shared with :mod:`repro.dist.grouped` like
+    :func:`term_sum_chol`."""
     n = x.shape[-1]
     dtype = x.dtype
-    c_odd = c[0::2]
     r = c_odd.shape[0]
     sqrt_c = jnp.sqrt(c_odd).astype(dtype)
     eye = jnp.eye(n, dtype=dtype)
@@ -108,23 +117,35 @@ def _zolo_iter_cholqr2(x, c, a, mhat):
         l2, q1, left_side=False, lower=True, transpose_a=True)
     q2 = jax.lax.linalg.triangular_solve(
         l2, q2, left_side=False, lower=True, transpose_a=True)
-    t = jnp.einsum("j,jmk,jnk->mn", (a / jnp.sqrt(c_odd)).astype(dtype),
-                   q1, q2)
-    return mhat.astype(dtype) * (x + t)
+    return jnp.einsum("j,jmk,jnk->mn", (a / jnp.sqrt(c_odd)).astype(dtype),
+                      q1, q2)
 
 
-def _zolo_iter_householder(x, c, a, mhat, block: int = 32):
-    """Paper-faithful first iteration: blocked *structured* Householder QR
-    of [X; sqrt(c_j) I] (MPDGEQRF/MPDORGQR analogue, §3.1)."""
+def _zolo_iter_cholqr2(x, c, a, mhat):
+    """One shifted-CholeskyQR2 Zolotarev iteration (stable first iter)."""
+    t = term_sum_cholqr2(x, c[0::2], a)
+    return mhat.astype(x.dtype) * (x + t)
+
+
+def term_sum_householder(x, c_odd, a, block: int = 32):
+    """sum_j (a_j / sqrt(c_j)) Q1_j Q2_j^T via blocked *structured*
+    Householder QR of [X; sqrt(c_j) I] (MPDGEQRF/MPDORGQR analogue, §3.1)
+    over the given odd-coefficient slice.  Shared with
+    :mod:`repro.dist.grouped` like :func:`term_sum_chol`."""
     dtype = x.dtype
-    c_odd = c[0::2]
     terms = []
     for j in range(c_odd.shape[0]):
         q1, q2 = _structured_qr_q1q2(x, jnp.sqrt(c_odd[j]).astype(dtype),
                                      block=block)
         terms.append((a[j] / jnp.sqrt(c_odd[j])).astype(dtype)
                      * jnp.einsum("mk,nk->mn", q1, q2))
-    return mhat.astype(dtype) * (x + sum(terms))
+    return sum(terms)
+
+
+def _zolo_iter_householder(x, c, a, mhat, block: int = 32):
+    """Paper-faithful first iteration: structured Householder QR terms."""
+    t = term_sum_householder(x, c[0::2], a, block=block)
+    return mhat.astype(x.dtype) * (x + t)
 
 
 _ITER_FNS = {

@@ -1,0 +1,44 @@
+"""Distribution layer: logical-axis sharding + grouped (Alg. 3) Zolo-PD.
+
+Two modules, two concerns:
+
+* :mod:`repro.dist.sharding` — the *logical-axis* layer every subsystem
+  (models, optimizer, data, launch) targets; mesh binding happens once,
+  at launch, via a :class:`LogicalRules` table.
+* :mod:`repro.dist.grouped` — the paper's r-process-group Zolo-PD
+  (Algorithm 3) on a ("zolo", "sep") mesh via ``shard_map``.
+
+See ``src/repro/dist/README.md`` for the Algorithm-3 -> mesh mapping.
+"""
+
+from repro.dist.grouped import (
+    grouped_iteration_flops,
+    grouped_zolo_pd_static,
+    zolo_group_mesh,
+)
+from repro.dist.sharding import (
+    REPLICATED,
+    LogicalRules,
+    activation_hints,
+    arch_rules,
+    current_rules,
+    hint,
+    hint_tree,
+    logical_sharding,
+    tree_shardings,
+)
+
+__all__ = [
+    "REPLICATED",
+    "LogicalRules",
+    "activation_hints",
+    "arch_rules",
+    "current_rules",
+    "grouped_iteration_flops",
+    "grouped_zolo_pd_static",
+    "hint",
+    "hint_tree",
+    "logical_sharding",
+    "tree_shardings",
+    "zolo_group_mesh",
+]

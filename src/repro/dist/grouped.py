@@ -1,0 +1,144 @@
+"""Paper Algorithm 3: grouped Zolo-PD over r independent process groups.
+
+The r Zolotarev terms of eq. (12) are embarrassingly parallel: term j
+only needs X and its own shift c_{2j-1}.  The paper runs each term in its
+own ScaLAPACK process group (BLACS contexts) and combines with DGSUM2D.
+Here the same decomposition is a 2-D device mesh:
+
+    zolo  (size r)        — one *group* per Zolotarev term
+    sep   (size ndev/r)   — devices *inside* a group (the per-group
+                            ScaLAPACK grid; spare capacity today, the
+                            intra-group 2-D block distribution tomorrow)
+
+``shard_map`` partitions the per-iteration coefficient arrays over
+"zolo", so each group's body computes exactly one shifted factorization —
+recomputing its own Gram matrix, as the paper's groups do (the
+single-address-space gram-*sharing* optimization lives in
+:mod:`repro.core.zolo`) — and the weighted sum of terms is one
+``psum`` over the "zolo" axis (the DGSUM2D role).
+
+The schedule is trace-time (:func:`repro.core.coeffs.zolo_schedule_np`),
+matching :func:`repro.core.zolo.zolo_pd_static`: first iteration via
+shifted CholeskyQR2 (the stable regime), the rest via single Cholesky.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import coeffs as _coeffs
+from repro.core import zolo as _zolo
+from repro.core.qdwh import PolarInfo
+
+
+def zolo_group_mesh(r: int, devices=None) -> Mesh:
+    """{"zolo": r, "sep": ndev // r} mesh over the available devices.
+
+    "zolo" indexes the r Zolotarev-term groups (paper's TOP context);
+    "sep" indexes devices within one group (paper's SEP contexts).
+    """
+    if devices is None:
+        devices = jax.devices()
+    ndev = len(devices)
+    if r < 1 or ndev % r != 0:
+        raise ValueError(
+            f"cannot split {ndev} devices into r={r} Zolotarev groups; "
+            f"r must divide the device count")
+    arr = np.asarray(devices).reshape(r, ndev // r)
+    return Mesh(arr, ("zolo", "sep"))
+
+
+_TERM_FNS = {
+    "chol": _zolo.term_sum_chol,
+    "cholqr2": _zolo.term_sum_cholqr2,
+    "householder": _zolo.term_sum_householder,
+}
+
+
+def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: float,
+                           r: Optional[int] = None, max_iters: int = 6,
+                           qr_mode: str = "cholqr2", qr_iters: int = 1,
+                           alpha=None, return_info: bool = False):
+    """Grouped (Alg. 3) Zolo-PD orthogonal factor of ``a`` (m >= n).
+
+    ``a`` must have singular values in [l0 * alpha, alpha] (alpha=1 when
+    omitted, i.e. pre-scaled like :func:`repro.core.zolo.zolo_pd_static`).
+    ``mesh`` must come from :func:`zolo_group_mesh` with a "zolo" axis of
+    size ``r``.  ``qr_mode`` / ``qr_iters`` select the stable-regime term
+    for the first iterations exactly as in ``zolo_pd_static``.  Returns Q
+    only (or (Q, PolarInfo) with ``return_info=True``); form H with
+    ``repro.core.form_h(q, a)`` (the paper forms H the same way, after
+    the combine).
+    """
+    if a.ndim != 2:
+        raise ValueError(f"grouped Zolo-PD takes one matrix; got {a.shape}")
+    if "zolo" not in mesh.axis_names:
+        raise ValueError(f"mesh has no 'zolo' axis: {mesh.axis_names}")
+    if r is None:
+        r = mesh.shape["zolo"]
+    if mesh.shape["zolo"] != r:
+        raise ValueError(
+            f"mesh 'zolo' axis has size {mesh.shape['zolo']} != r={r}")
+    if qr_mode not in _TERM_FNS:
+        raise ValueError(f"unknown qr_mode: {qr_mode!r} "
+                         f"(one of {sorted(_TERM_FNS)})")
+
+    sched = _coeffs.zolo_schedule_np(float(l0), r, max_iters=max_iters)
+    coeff_dtype = jnp.promote_types(a.dtype, jnp.float32)
+    # (iters, r): column j belongs to group j
+    c_odd = jnp.asarray([it.c[0::2] for it in sched], coeff_dtype)
+    a_wts = jnp.asarray([it.a for it in sched], coeff_dtype)
+    mhats = jnp.asarray([it.mhat for it in sched], coeff_dtype)
+    x0 = a if alpha is None else a / jnp.asarray(alpha, a.dtype)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), P(None, "zolo"), P(None, "zolo"), P()),
+        out_specs=P())
+    def run(x, c_grp, a_grp, mh):
+        # c_grp / a_grp: (iters, 1) — this group's shift and weight per
+        # iteration.  x is replicated; each group recomputes its own Gram
+        # inside term_sum_* (paper-faithful; no cross-group reuse).
+        for i in range(len(sched)):
+            term = (_TERM_FNS[qr_mode] if i < qr_iters
+                    else _zolo.term_sum_chol)
+            t = term(x, c_grp[i], a_grp[i])
+            t = jax.lax.psum(t, "zolo")  # DGSUM2D combine over groups
+            x = mh[i].astype(x.dtype) * (x + t)
+        return x
+
+    q = run(x0, c_odd, a_wts, mhats)
+    if return_info:
+        info = PolarInfo(iterations=jnp.int32(len(sched)),
+                         residual=jnp.asarray(0.0, a.dtype),
+                         l_final=jnp.asarray(sched[-1].l_after, jnp.float32))
+        return q, info
+    return q
+
+
+def grouped_iteration_flops(m: int, n: int, r: int, iters: int,
+                            gram_shared: bool) -> float:
+    """Total flops (summed over all r groups) of ``iters`` Cholesky-variant
+    Zolotarev iterations on an m x n matrix.
+
+    Per term: one n x n Cholesky (n^3/3) plus two triangular solves
+    against m right-hand sides (2 * m n^2).  The Gram product (2 m n^2)
+    is paid once per *group* in the paper-faithful mode (each group owns
+    one term and recomputes G) and once per *iteration* in the
+    single-address-space gram-shared mode.  Divide by r for the per-group
+    critical path in the r-way parallel setting.
+    """
+    gram = 2.0 * m * n * n
+    per_term = n ** 3 / 3.0 + 2.0 * m * n * n
+    if gram_shared:
+        per_iter = gram + r * per_term
+    else:
+        per_iter = r * (gram + per_term)
+    return float(iters * per_iter)

@@ -1,0 +1,278 @@
+"""Logical-axis sharding: the layer algorithm code targets.
+
+Model / optimizer / data code annotates arrays with *logical* axis names
+("batch", "embed", "experts", "opt_rows", ...).  How those names bind to
+physical mesh axes is decided once, at launch, by a :class:`LogicalRules`
+table (built by :func:`arch_rules`).  This keeps every call site
+mesh-agnostic: the same ``hint(x, "experts", None, None)`` lowers to a
+``with_sharding_constraint`` on a 512-chip production mesh and to a no-op
+in a single-device unit test.
+
+Two consumption modes:
+
+* **Placement** — :func:`logical_sharding` / :func:`tree_shardings` turn
+  logical axes into concrete :class:`~jax.sharding.NamedSharding`s for
+  ``device_put`` / ``jax.jit`` in/out shardings (launcher + dry-run path).
+* **Constraint** — :func:`hint` / :func:`hint_tree` inside traced code.
+  They are identity functions unless an :func:`activation_hints` context
+  (which carries the rules *and* their mesh) is active, so library code
+  can sprinkle hints freely without coupling to any mesh.
+
+Vocabulary note (Algorithm 3 mapping): the Zolo-PD process groups get
+their own mesh axes ("zolo", "sep") built by
+:func:`repro.dist.grouped.zolo_group_mesh`; model meshes use
+("pod",) "data", "model".  Rules tables never mix the two.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# A logical-axis annotation for one array dimension: a logical name, or
+# None (replicated).  "REPLICATED" as a *whole-leaf* annotation marks a
+# fully replicated array of any rank.
+AxisName = Optional[str]
+Axes = Union[None, str, Tuple[AxisName, ...]]
+
+REPLICATED = "REPLICATED"
+
+
+class LogicalRules:
+    """Immutable logical-name -> mesh-axis rule table.
+
+    ``rules`` maps each logical axis name to a physical mesh axis name, a
+    tuple of mesh axis names (the dimension is sharded over their
+    product, e.g. ``("pod", "data")``), or None (replicated).  Unknown
+    logical names resolve to None, so partial tables are safe.
+
+    The table may carry the mesh it was built against (``mesh=``); that
+    is what lets :func:`hint` build shardings inside traced code.
+    """
+
+    __slots__ = ("_table", "mesh")
+
+    def __init__(self, rules: Mapping[str, Any], mesh: Optional[Mesh] = None):
+        table = {}
+        for name, ax in dict(rules).items():
+            if ax is not None and not isinstance(ax, (str, tuple)):
+                raise TypeError(f"rule for {name!r} must be a mesh axis "
+                                f"name, tuple, or None; got {ax!r}")
+            table[name] = tuple(ax) if isinstance(ax, tuple) else ax
+        self._table = table
+        self.mesh = mesh
+
+    def axis(self, name: Optional[str]):
+        """Mesh axis (or axes tuple, or None) for one logical name."""
+        if name is None:
+            return None
+        return self._table.get(name)
+
+    def spec(self, axes: Axes, mesh: Optional[Mesh] = None) -> P:
+        """Resolve a per-dimension logical-axes annotation to a
+        PartitionSpec, dropping mesh axes the target mesh doesn't have."""
+        mesh = mesh if mesh is not None else self.mesh
+        present = set(mesh.axis_names) if mesh is not None else None
+
+        def resolve(name):
+            ax = self.axis(name)
+            if ax is None:
+                return None
+            if isinstance(ax, tuple):
+                if present is not None:
+                    ax = tuple(a for a in ax if a in present)
+                if not ax:
+                    return None
+                return ax[0] if len(ax) == 1 else ax
+            if present is not None and ax not in present:
+                return None
+            return ax
+
+        if axes is None or axes == REPLICATED:
+            return P()
+        if isinstance(axes, str):  # single logical name for a 1-D array
+            return P(resolve(axes))
+        return P(*(resolve(name) for name in axes))
+
+    def sharding(self, axes: Axes, mesh: Optional[Mesh] = None
+                 ) -> NamedSharding:
+        mesh = mesh if mesh is not None else self.mesh
+        if mesh is None:
+            raise ValueError("LogicalRules has no mesh bound; pass mesh=")
+        return NamedSharding(mesh, self.spec(axes, mesh))
+
+    def items(self):
+        return self._table.items()
+
+    def __repr__(self):
+        return (f"LogicalRules({self._table!r}, "
+                f"mesh={None if self.mesh is None else dict(self.mesh.shape)})")
+
+
+def logical_sharding(mesh: Mesh, rules: LogicalRules, axes: Axes
+                     ) -> NamedSharding:
+    """NamedSharding for one array annotated with logical ``axes``."""
+    return rules.sharding(axes, mesh=mesh)
+
+
+def _is_axes_leaf(x) -> bool:
+    """Leaves of an *axes tree*: None, "REPLICATED"/a logical name, or a
+    per-dimension tuple of names.  Structural tuples (tuples of dicts /
+    tuples) are containers, not leaves."""
+    return (x is None or isinstance(x, str)
+            or (isinstance(x, tuple)
+                and all(e is None or isinstance(e, str) for e in x)))
+
+
+def tree_shardings(mesh: Mesh, rules: LogicalRules, axes_tree):
+    """Map an axes tree (mirroring a param/state tree, with tuple-of-names
+    leaves) to a matching tree of NamedShardings.
+
+    ``None`` axes leaves stay ``None`` so the result zips cleanly against
+    abstract trees that hold ``None`` at the same spots (e.g. nonparam-LN
+    norms)."""
+
+    def one(ax):
+        if ax is None:
+            return None
+        return logical_sharding(mesh, rules, ax)
+
+    return jax.tree.map(one, axes_tree, is_leaf=_is_axes_leaf)
+
+
+# --- activation hints (constraint mode) ------------------------------------
+
+# ContextVar rather than a module-global stack: concurrent traces (e.g.
+# lowering two configs from a thread pool) must each see only their own
+# rules.
+_ACTIVE_RULES: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dist_active_rules", default=())
+
+
+def current_rules() -> Optional[LogicalRules]:
+    """The innermost active :func:`activation_hints` rules, or None."""
+    stack = _ACTIVE_RULES.get()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def activation_hints(rules: LogicalRules):
+    """Enable :func:`hint` / :func:`hint_tree` under this block.
+
+    The rules must carry a mesh (``arch_rules`` binds one).  Tracing a
+    function inside this context bakes the constraints into the jaxpr;
+    outside it, hints are exact no-ops — so hint-annotated library code
+    costs nothing in single-device tests.
+    """
+    if rules.mesh is None:
+        raise ValueError("activation_hints requires mesh-bound rules "
+                         "(build them with arch_rules(cfg, mesh, shape))")
+    token = _ACTIVE_RULES.set(_ACTIVE_RULES.get() + (rules,))
+    try:
+        yield rules
+    finally:
+        _ACTIVE_RULES.reset(token)
+
+
+def hint(x, *logical_axes: AxisName):
+    """Constrain ``x``'s sharding by per-dimension logical axis names.
+
+    Identity (returns ``x`` itself) when no :func:`activation_hints`
+    context is active; ``with_sharding_constraint`` against the active
+    rules' mesh otherwise."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(tuple(logical_axes)))
+
+
+def hint_tree(tree, axes_tree):
+    """Tree version of :func:`hint`.
+
+    ``axes_tree`` mirrors ``tree`` with axes-leaves (tuples of logical
+    names, "REPLICATED", or None) at array positions; extra trailing
+    structure rules are resolved leaf-by-leaf.  Identity outside an
+    :func:`activation_hints` context."""
+    rules = current_rules()
+    if rules is None:
+        return tree
+
+    def one(x, ax):
+        if ax is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, rules.sharding(ax))
+
+    return jax.tree.map(one, tree, axes_tree)
+
+
+# --- rules construction -----------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh, global_batch: Optional[int]):
+    """Mesh axes the batch dimension shards over: ('pod','data') when both
+    exist, else 'data' — degraded to fewer axes (or None) when the batch
+    doesn't divide."""
+    cand = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    while cand:
+        size = math.prod(mesh.shape[a] for a in cand)
+        if global_batch is None or global_batch % size == 0:
+            return cand if len(cand) > 1 else cand[0]
+        cand = cand[1:]
+    return None
+
+
+def arch_rules(cfg, mesh: Mesh, shape=None) -> LogicalRules:
+    """Logical -> mesh rules for one (architecture, mesh, shape) cell.
+
+    Policy (single table shared by params, activations, caches, data, and
+    the optimizer — the names are the contract, this function is the only
+    place that binds them):
+
+    * "batch" / "cache_batch": DP over ("pod","data") when divisible.
+    * tensor-parallel dims ("vocab", "qkv", "mlp", "state", "ssd_in",
+      "cache_heads") and the expert axis: over "model".
+    * "embed": FSDP over "data" when the model dim divides it — the
+      train step re-pins bf16 casts + grads to this, which is what turns
+      the gradient reduction into a reduce-scatter.
+    * optimizer reshard ("opt_stack", "opt_rows"): stack over "model"
+      (expert/layer-major), long dim over "data" — the Zolo-PD Gram then
+      contracts over sharded rows with a single psum.
+    """
+    has_model = "model" in mesh.axis_names
+    has_data = "data" in mesh.axis_names
+    model = "model" if has_model else None
+    data = "data" if has_data else None
+    global_batch = getattr(shape, "global_batch", None)
+    batch = _batch_axes(mesh, global_batch)
+
+    d_model = getattr(cfg, "d_model", 0)
+    embed = data if (data and d_model
+                     and d_model % mesh.shape["data"] == 0) else None
+
+    table = {
+        # data / activations
+        "batch": batch,
+        "seq": None,
+        "cache_batch": batch,
+        "cache_heads": model,
+        # parameters
+        "vocab": model,
+        "embed": embed,
+        "layers": None,
+        "qkv": model,
+        "mlp": model,
+        "state": model,
+        "ssd_in": model,
+        "experts": model if getattr(cfg, "num_experts", 0) else None,
+        "expert_mlp": None,
+        # optimizer (ZoloMuon factorization reshard)
+        "opt_stack": model,
+        "opt_rows": data,
+    }
+    return LogicalRules(table, mesh=mesh)

@@ -1,0 +1,88 @@
+"""Deterministic fallback for the `hypothesis` API subset used here.
+
+Tier-1 must run on a bare install (jax + numpy + scipy + pytest).  When
+hypothesis is available (``pip install -e ".[test]"``) the real library
+is re-exported unchanged; otherwise ``@given`` runs ``max_examples``
+samples drawn from the declared strategies with a seed derived from the
+test name — deterministic across runs and machines, boundary values
+first so the extremes are always exercised.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import math
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw, boundary):
+            self._draw = draw
+            self.boundary = boundary  # deterministic edge values, tried first
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value, **_):
+            lo, hi = float(min_value), float(max_value)
+            log_uniform = lo > 0 and hi / lo > 1e3
+
+            def draw(rng):
+                if log_uniform:  # span decades the way hypothesis shrinks
+                    return float(math.exp(
+                        rng.uniform(math.log(lo), math.log(hi))))
+                return float(rng.uniform(lo, hi))
+
+            return _Strategy(draw, (lo, hi))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                (int(min_value), int(max_value)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, **_):
+        # works in either stacking order with @given: the attribute is
+        # read at call time, whether set on the raw test fn (settings
+        # innermost) or on the runner (settings outermost)
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_max_examples",
+                            getattr(fn, "_max_examples", 10))
+                seed = zlib.crc32(fn.__name__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    if i < 2:  # all-min, then all-max boundary cases
+                        vals = [s.boundary[i] for s in strats]
+                    else:
+                        vals = [s.draw(rng) for s in strats]
+                    try:
+                        fn(*vals)
+                    except Exception:
+                        print(f"{fn.__name__}: falsified with {vals!r}")
+                        raise
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco

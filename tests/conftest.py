@@ -27,3 +27,31 @@ def make_matrix(m, n, kappa, dtype=jnp.float64, seed=0, spectrum="geom"):
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def run_multidevice_script(script: str, marker: str, *, devices: int = 8,
+                           timeout: int = 600) -> None:
+    """Run ``script`` in a subprocess with ``devices`` virtual host devices
+    and assert it printed ``marker``.
+
+    Multi-device tests must run out-of-process: XLA_FLAGS is read once at
+    jax import, and the main test process stays at 1 device.  The script
+    gets x64, ``src`` on sys.path, and the repo root as cwd.
+    """
+    import subprocess
+    import sys
+
+    prelude = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = '
+        f'"--xla_force_host_platform_device_count={devices}"\n'
+        'os.environ["JAX_ENABLE_X64"] = "1"\n'
+        "import sys\n"
+        'sys.path.insert(0, "src")\n'
+    )
+    out = subprocess.run([sys.executable, "-c", prelude + script],
+                         capture_output=True, text=True,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         timeout=timeout)
+    assert marker in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]

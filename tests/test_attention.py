@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 from repro.kernels.ref import flash_attention_ref
@@ -34,10 +33,12 @@ def test_flash_vs_reference(sq, kv, g, window, rng):
                                atol=2e-5, rtol=2e-5)
 
 
-@given(st.integers(min_value=1, max_value=4),
-       st.integers(min_value=8, max_value=40),
-       st.integers(min_value=8, max_value=64))
-@settings(max_examples=6, deadline=None)
+# Seeded stand-in for the old hypothesis property: (batch, seq, chunk)
+# triples spanning ragged seq/chunk ratios, chunk > seq, chunk == seq,
+# and odd sequence lengths — deterministic on a bare install.
+@pytest.mark.parametrize("b,sq,chunk", [
+    (1, 8, 8), (2, 17, 8), (1, 40, 16), (3, 33, 64),
+    (4, 9, 32), (2, 39, 13)])
 def test_flash_chunk_invariance(b, sq, chunk):
     rng = np.random.default_rng(b * 100 + sq)
     kv, g, hd = 2, 2, 8

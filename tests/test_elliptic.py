@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 import scipy.special as sp
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 import jax.numpy as jnp
 from repro.core import elliptic as el

@@ -2,16 +2,9 @@
 
 Runs in a subprocess so the main test process keeps 1 device."""
 
-import os
-import subprocess
-import sys
+from conftest import run_multidevice_script
 
 _SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-os.environ["JAX_ENABLE_X64"] = "1"
-import sys
-sys.path.insert(0, "src")
 import numpy as np
 import jax, jax.numpy as jnp
 import repro.core as C
@@ -40,7 +33,4 @@ print("GROUPED_OK")
 
 
 def test_grouped_zolo_subprocess():
-    out = subprocess.run([sys.executable, "-c", _SCRIPT],
-                         capture_output=True, text=True, cwd=os.getcwd(),
-                         timeout=600)
-    assert "GROUPED_OK" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]
+    run_multidevice_script(_SCRIPT, "GROUPED_OK")

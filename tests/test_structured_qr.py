@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 import jax.numpy as jnp
 import repro.core.structured_qr  # noqa: F401  (module import kept explicit)
