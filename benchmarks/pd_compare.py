@@ -4,14 +4,14 @@ On one CPU there is no subgroup parallelism, so the wall-clock comparison
 shows the *serial* trade (Zolo spends more flops per iteration, saves
 iterations); the flop model shows the per-group parallel cost the paper's
 speedups come from (critical path / r).
+
+Both solvers run through ``repro.solver`` plans, so the timed repeats
+reuse one compiled executable per configuration.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-import repro.core as C
+import repro.solver as S
 from repro.dist.grouped import grouped_iteration_flops
 
 from benchmarks.common import BENCH_N, emit, make_matrix, time_fn
@@ -22,17 +22,18 @@ def run():
     for name, kappa in (("fv1", 1.4e1), ("linverse", 9.06e3),
                         ("bcsstk18", 3.46e11)):
         a = make_matrix(n, kappa, m=n, seed=2)
-        qdwh = jax.jit(lambda a_: C.qdwh_pd(
-            a_, alpha=1.0, l=0.9 / kappa, want_h=False)[0])
-        zolo = jax.jit(lambda a_: C.zolo_pd(
-            a_, r=2, alpha=1.0, l=0.9 / kappa, want_h=False)[0])
-        t_q = time_fn(qdwh, a)
-        t_z = time_fn(zolo, a)
+        extra = (("alpha", 1.0), ("l", 0.9 / kappa))
+        qdwh = S.plan(S.SvdConfig(method="qdwh", extra=extra),
+                      a.shape, a.dtype)
+        zolo = S.plan(S.SvdConfig(method="zolo", r=2, extra=extra),
+                      a.shape, a.dtype)
+        t_q = time_fn(lambda x: qdwh.polar(x, want_h=False)[0], a)
+        t_z = time_fn(lambda x: zolo.polar(x, want_h=False)[0], a)
         emit(f"table6.{name}.qdwh_pd", t_q * 1e6, "")
         emit(f"table6.{name}.zolo_pd_r2", t_z * 1e6,
              f"serial_ratio={t_q / t_z:.2f}x")
-        _, _, iq = C.qdwh_pd(a, alpha=1.0, l=0.9 / kappa, want_h=False)
-        _, _, iz = C.zolo_pd(a, r=2, alpha=1.0, l=0.9 / kappa, want_h=False)
+        _, _, iq = qdwh.polar(a, want_h=False)
+        _, _, iz = zolo.polar(a, want_h=False)
         emit(f"table6.{name}.iters", 0.0,
              f"qdwh={int(iq.iterations)};zolo_r2={int(iz.iterations)}")
 

@@ -1,10 +1,13 @@
-"""Paper Algorithm 3 live on 8 (host) devices: the r subgroup contexts as
-a ('zolo', 'sep') mesh, with the DGSUM2D combine as psum('zolo').
+"""Paper Algorithm 3 live on 8 (host) devices, through the plan API: the
+r subgroup contexts as a ('zolo', 'sep') mesh bound into an SvdPlan at
+plan time, with the DGSUM2D combine as psum('zolo').
 
 Also runs the paper-faithful vs gram-shared flop accounting (the
 beyond-paper optimization of DESIGN.md §3).
 
-  python examples/distributed_svd.py          (sets its own XLA_FLAGS)
+  python examples/distributed_svd.py      (sets its own XLA_FLAGS;
+                                           needs `pip install -e .` or
+                                           PYTHONPATH=src)
 """
 
 import os
@@ -12,18 +15,14 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 os.environ.setdefault("JAX_ENABLE_X64", "1")
 
-import sys  # noqa: E402
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 import repro.core as C  # noqa: E402
+import repro.solver as S  # noqa: E402
 from repro.dist.grouped import (  # noqa: E402
     grouped_iteration_flops,
-    grouped_zolo_pd_static,
     zolo_group_mesh,
 )
 
@@ -40,17 +39,24 @@ def main():
         mesh = zolo_group_mesh(r)
         print(f"\nr={r}: mesh = {dict(mesh.shape)}  "
               f"(TOP context = {r} groups, SEP = {8 // r} devices each)")
-        q = grouped_zolo_pd_static(a, mesh=mesh, l0=0.9 / kappa, r=r)
-        h = C.form_h(q, a)
+        # the mesh makes mode resolve to "grouped"; the Zolotarev
+        # schedule is precomputed at plan time and the compiled
+        # executable is cached per (shape, dtype, config, mesh)
+        cfg = S.SvdConfig(method="auto", kappa=kappa,
+                          l0_policy="estimate_at_plan")
+        p = S.plan(cfg, a.shape, a.dtype, mesh=mesh)
+        print(f"  plan: method={p.method} mode={p.mode} r={p.r} "
+              f"schedule_iters={len(p.schedule)}")
+        q, h, info = p.polar(a)
         print(f"  orth={float(C.orthogonality(q)):.2e}  "
               f"rec={float(jnp.linalg.norm(q @ h - a) / jnp.linalg.norm(a)):.2e}")
-        # eigendecomposition of H completes the SVD (paper Alg. 2)
-        w, vec = jnp.linalg.eigh(h)
+        # the full grouped SVD (paper Alg. 2 over Alg. 3)
+        u_p, s_p, vh_p = p.svd(a)
         s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)
-        err = float(np.abs(np.sort(np.asarray(w))[::-1] - s_ref).max())
+        err = float(np.abs(np.asarray(s_p) - s_ref).max())
         print(f"  Zolo-SVD singular-value error vs LAPACK: {err:.2e}")
         # cost model: paper-faithful (per-group Gram) vs gram-shared
-        iters = 4 if r == 2 else 3
+        iters = len(p.schedule)
         faithful = grouped_iteration_flops(m, n, r, iters, False)
         shared = grouped_iteration_flops(m, n, r, iters, True)
         print(f"  flops: paper-faithful={faithful:.3e}  "

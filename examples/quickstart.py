@@ -1,6 +1,7 @@
-"""Quickstart: Zolo-SVD as a drop-in SVD, validated against jnp.linalg.svd.
+"""Quickstart: plan once, solve many — the ``repro.solver`` plan/execute
+API, validated against jnp.linalg.svd.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py   (or after pip install -e .)
 """
 
 import os
@@ -11,6 +12,7 @@ import numpy as np  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 import repro.core as C  # noqa: E402
+import repro.solver as S  # noqa: E402
 
 
 def main():
@@ -21,21 +23,36 @@ def main():
     a = jnp.asarray((u * np.geomspace(1, 1 / kappa, n)) @ v.T)
     print(f"matrix: {n}x{n}, kappa={kappa:.0e}")
 
-    # 1. polar decomposition via the paper's Zolo-PD (r chosen per Table 1)
-    r = C.choose_r(kappa)
-    q, h, info = C.polar_decompose(a, method="zolo", r=r)
-    print(f"Zolo-PD: r={r}, iterations={int(info.iterations)}, "
+    # 1. plan: auto method via the registry cost model, r per paper
+    #    Table 1, l0 from the conditioning hint, schedule precomputed.
+    cfg = S.SvdConfig(method="auto", kappa=kappa,
+                      l0_policy="estimate_at_plan")
+    p = S.plan(cfg, a.shape, a.dtype)
+    print(f"plan: {p}  schedule_iters={len(p.schedule or ())} "
+          f"flops~{p.flops_estimate:.2e}")
+
+    # 2. execute: the first call compiles; repeats at this
+    #    (shape, dtype, config) hit the cached executable — no retrace.
+    u_p, s_p, vh_p = p.svd(a)
+    t0 = S.trace_count()
+    p.svd(a)
+    assert S.trace_count() == t0, "second solve must not retrace"
+    s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)
+    print(f"{p.method}-SVD: "
+          f"residual={float(C.svd_residual(a, u_p, s_p, vh_p)):.2e}, "
+          f"orthU={float(C.orthogonality(u_p)):.2e}, "
+          f"max |sigma - ref|={float(np.abs(np.asarray(s_p) - s_ref).max()):.2e}")
+
+    # 3. the paper's Zolo-PD explicitly, off a second plan, plus the
+    #    polar factorization from the same plan object.
+    zolo = S.plan(cfg.replace(method="zolo_static"), a.shape, a.dtype)
+    q, h, info = zolo.polar(a)
+    print(f"Zolo-PD: r={zolo.r}, iterations={int(info.iterations)}, "
           f"orth={float(C.orthogonality(q)):.2e}, "
           f"|QH-A|/|A|={float(jnp.linalg.norm(q @ h - a) / jnp.linalg.norm(a)):.2e}")
 
-    # 2. full SVD via PD + eigendecomposition (paper Alg. 2)
-    u_z, s_z, vh_z = C.polar_svd(a, method="zolo", r=r)
-    s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)
-    print(f"Zolo-SVD: residual={float(C.svd_residual(a, u_z, s_z, vh_z)):.2e}, "
-          f"orthU={float(C.orthogonality(u_z)):.2e}, "
-          f"max |sigma - ref|={float(np.abs(np.asarray(s_z) - s_ref).max()):.2e}")
-
-    # 3. QDWH baseline (the paper's comparison)
+    # 4. dynamic QDWH baseline through the drop-in wrapper (the wrapper
+    #    rides the same plan path; the estimate is made in-graph).
     q2, _, info2 = C.polar_decompose(a, method="qdwh", want_h=False)
     print(f"QDWH-PD: iterations={int(info2.iterations)} "
           f"(Zolo saves {int(info2.iterations) - int(info.iterations)})")

@@ -1,4 +1,10 @@
-"""Core numerics: the paper's contribution (Zolo-PD / Zolo-SVD family)."""
+"""Core numerics: the paper's contribution (Zolo-PD / Zolo-SVD family).
+
+``polar_decompose`` / ``polar_svd`` here are thin back-compat wrappers
+over the plan/execute surface in :mod:`repro.solver` (``SvdConfig`` ->
+``plan`` -> ``SvdPlan``); hold a plan for repeated solves — it compiles
+once per (shape, dtype, config) and never retraces.
+"""
 
 from repro.core.coeffs import (
     choose_r,

@@ -17,9 +17,7 @@ forming H (the Muon path only needs Q).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +26,9 @@ from repro.core import coeffs as _coeffs
 from repro.core import norms as _norms
 
 
-@dataclasses.dataclass
-class PolarInfo:
+class PolarInfo(NamedTuple):
+    """Convergence record; a NamedTuple so compiled (jit) plans return it."""
+
     iterations: jnp.ndarray  # scalar int32
     residual: jnp.ndarray  # final ||X2 - X1||_F / ||X2||_F
     l_final: jnp.ndarray
@@ -115,16 +114,26 @@ def qdwh_pd(a, *, alpha=None, l=None, max_iters: int = 12,
     return x, None, info
 
 
-def qdwh_pd_static(a, *, l0: float, max_iters: int = 8, want_h: bool = True,
-                   qr_iters: Optional[int] = None):
+def qdwh_pd_static(a, *, l0: Optional[float] = None, max_iters: int = 8,
+                   want_h: bool = True, qr_iters: Optional[int] = None,
+                   schedule=None):
     """Unrolled QDWH with a trace-time coefficient schedule from ``l0``.
 
     ``a`` must already be scaled so that sigma_max(a) <= 1 (callers divide
     by a sigma_max upper bound first).  ``qr_iters``: how many leading
     iterations use the inverse-free QR form; default: while the schedule's
-    ``c_k`` exceeds 100 (paper's switch).
+    ``c_k`` exceeds 100 (paper's switch).  A precomputed ``schedule``
+    (sequence of ``(a, b, c, l)`` rows from
+    :func:`repro.core.coeffs.qdwh_schedule_np`, e.g. bound by an
+    ``SvdPlan``) takes precedence over ``l0``/``max_iters``.
     """
-    sched = _coeffs.qdwh_schedule_np(float(l0), max_iters=max_iters)
+    if schedule is not None:
+        sched = list(schedule)
+    elif l0 is not None:
+        sched = _coeffs.qdwh_schedule_np(float(l0), max_iters=max_iters)
+    else:
+        raise ValueError("qdwh_pd_static needs l0= or a precomputed "
+                         "schedule=")
     x = a
     coeff_dtype = jnp.promote_types(a.dtype, jnp.float32)
     for i, (ca, cb, cc, _) in enumerate(sched):

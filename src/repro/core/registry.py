@@ -1,9 +1,10 @@
 """Solver registry: polar-decomposition and eigensolver backends.
 
-``repro.core.svd`` dispatches *only* through this table — there is one
-code path from ``polar_decompose`` / ``polar_svd`` down to a backend, and
-a new solver (a Pallas kernel, a distributed variant, a debugging oracle)
-plugs in with a decorator instead of another ``elif``:
+``repro.solver`` plans and executes *only* through this table — there is
+one code path from ``plan(...)`` (and the thin back-compat wrappers
+``polar_decompose`` / ``polar_svd``) down to a backend, and a new solver
+(a Pallas kernel, a distributed variant, a debugging oracle) plugs in
+with a decorator instead of another ``elif``:
 
     @register_polar("my_solver")
     def my_solver(a, **kw):
@@ -15,6 +16,29 @@ already in canonical (m >= n) orientation; ``polar_svd`` passes
 ``want_h=True`` through ``kw``.  A spec with ``supports_grouped`` also
 carries ``grouped_fn(a, *, mesh, **kw)`` routing the same contract
 through r-process-group execution (paper Algorithm 3).
+
+Plan-time contract (consumed by :mod:`repro.solver`):
+
+* ``flops_fn(m, n, *, r, kappa, grouped=False) -> float`` — total flop
+  estimate for solving an (m, n) problem of condition ``kappa`` at
+  Zolotarev order ``r``; ``grouped=True`` means Algorithm-3 execution
+  (e.g. per-group Gram recomputation instead of the shared product).
+  ``SvdConfig(method="auto")`` scores every capability-matching backend
+  with this hook (grouped mode divides by r — the per-group critical
+  path) and picks the cheapest; specs without a ``flops_fn`` rank last.
+* ``plan_fn(res) -> dict`` — called once at plan time with the resolved
+  :class:`repro.solver.PlanResolution` (m, n, mode, r, l0, kappa,
+  max_iters, qr_mode, qr_iters, nb); returns the *static* backend kwargs
+  the plan should bind — e.g. the precomputed trace-time Zolotarev
+  schedule (``{"schedule": ...}``) so repeated executions never rebuild
+  it.  A ``plan_fn`` should raise ``ValueError`` for unmet plan-time
+  requirements (e.g. a static schedule without ``l0``), and should
+  re-emit every resolved config knob the backend accepts (those it
+  names are authoritative over the caller's raw duplicates).
+
+Caller kwargs (``SvdConfig.extra`` / legacy ``**kw``) otherwise pass
+through to the backend verbatim — a kwarg the backend does not accept
+fails loudly, exactly as a direct call would.
 """
 
 from __future__ import annotations
@@ -34,7 +58,13 @@ class PolarSpec:
     requires_mesh: bool = False     # grouped-only backend: mesh= mandatory
     dynamic: bool = False           # runtime conditioning (while_loop)
     is_oracle: bool = False         # reference/debug path, not a solver
+    baseline: bool = False          # comparison baseline: explicit use
+                                    # only, never picked by method="auto"
     grouped_fn: Optional[Callable] = None
+    # plan-time hooks (see module docstring): cost model for method="auto"
+    # and static-kwarg binding (precomputed schedules) for SvdPlan
+    flops_fn: Optional[Callable] = None  # (m, n, *, r, kappa) -> float
+    plan_fn: Optional[Callable] = None   # (PlanResolution) -> dict
     description: str = ""
 
 
@@ -44,6 +74,9 @@ class EigSpec:
 
     name: str
     fn: Callable  # fn(h, **kw) -> (w ascending, v)
+    # same plan-time contract as PolarSpec, for the eig stage of Alg. 2
+    flops_fn: Optional[Callable] = None  # (n, *, kappa) -> float
+    plan_fn: Optional[Callable] = None   # (PlanResolution) -> dict
     description: str = ""
 
 
@@ -66,7 +99,9 @@ def _same_origin(old: Callable, new: Callable) -> bool:
 
 def register_polar(name: str, *, supports_grouped: bool = False,
                    requires_mesh: bool = False, dynamic: bool = False,
-                   is_oracle: bool = False, grouped_fn: Callable = None,
+                   is_oracle: bool = False, baseline: bool = False,
+                   grouped_fn: Callable = None,
+                   flops_fn: Callable = None, plan_fn: Callable = None,
                    description: str = ""):
     """Decorator registering ``fn(a, **kw) -> (q, h, info)`` under ``name``."""
 
@@ -82,20 +117,24 @@ def register_polar(name: str, *, supports_grouped: bool = False,
         _POLAR[name] = PolarSpec(
             name=name, fn=fn, supports_grouped=supports_grouped,
             requires_mesh=requires_mesh, dynamic=dynamic,
-            is_oracle=is_oracle, grouped_fn=grouped_fn,
+            is_oracle=is_oracle, baseline=baseline,
+            grouped_fn=grouped_fn,
+            flops_fn=flops_fn, plan_fn=plan_fn,
             description=description)
         return fn
 
     return deco
 
 
-def register_eig(name: str, *, description: str = ""):
+def register_eig(name: str, *, flops_fn: Callable = None,
+                 plan_fn: Callable = None, description: str = ""):
     """Decorator registering ``fn(h, **kw) -> (w, v)`` under ``name``."""
 
     def deco(fn):
         if name in _EIG and not _same_origin(_EIG[name].fn, fn):
             raise ValueError(f"eig solver {name!r} already registered")
-        _EIG[name] = EigSpec(name=name, fn=fn, description=description)
+        _EIG[name] = EigSpec(name=name, fn=fn, flops_fn=flops_fn,
+                             plan_fn=plan_fn, description=description)
         return fn
 
     return deco

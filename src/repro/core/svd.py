@@ -18,54 +18,153 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import coeffs as _coeffs
 from repro.core import eig as _eig
 from repro.core import newton as _newton
 from repro.core import norms as _norms
 from repro.core import qdwh as _qdwh
-from repro.core import registry as _registry
 from repro.core import zolo as _zolo
 from repro.core.registry import register_eig, register_polar
 
 
 # --- backend registrations --------------------------------------------------
-# Every solver reaches polar_decompose / polar_svd through the registry
-# below; there is no other dispatch.  New backends (Pallas kernels,
-# alternative distributed schemes) register here or in their own module.
+# Every solver reaches plan() / polar_decompose / polar_svd through the
+# registry below; there is no other dispatch.  New backends (Pallas
+# kernels, alternative distributed schemes) register here or in their own
+# module.  flops_fn / plan_fn are the plan-time hooks repro.solver
+# consumes for method="auto" scoring and schedule precomputation (see the
+# registry module docstring for the contract).
 
 
 def _grouped_zolo_adapter(a, *, mesh, l0=None, r=None, want_h: bool = False,
-                          hermitian_source=None, **kw):
+                          hermitian_source=None, schedule=None, **kw):
     """Route the (q, h, info) contract through Algorithm-3 grouped
-    execution, accepting the same kwargs as ``zolo_pd_static``.
-    Imported lazily: core must not depend on repro.dist."""
+    execution, accepting the same kwargs as ``zolo_pd_static`` plus a
+    plan-precomputed ``schedule``.  Imported lazily: core must not depend
+    on repro.dist."""
     from repro.dist import grouped as _grouped
 
-    if l0 is None:
-        raise ValueError("grouped zolo execution needs a static l0=")
+    if l0 is None and schedule is None:
+        raise ValueError("grouped zolo execution needs a static l0= or a "
+                         "plan-built schedule=")
     q, info = _grouped.grouped_zolo_pd_static(a, mesh=mesh, l0=l0, r=r,
+                                              schedule=schedule,
                                               return_info=True, **kw)
     src = a if hermitian_source is None else hermitian_source
     h = _qdwh.form_h(q, src) if want_h else None
     return q, h, info
 
 
+# --- plan-time cost models (flops_fn) ---------------------------------------
+# The Zolotarev models are seeded from repro.dist.grouped's flop
+# accounting (lazy import: core must not depend on repro.dist at import).
+
+
+def _zolo_flops(m, n, *, r, kappa, grouped=False):
+    from repro.dist.grouped import grouped_iteration_flops
+
+    iters = _coeffs.zolo_iter_count(float(kappa), int(r))
+    # single-address-space execution shares the Gram product across the r
+    # terms; grouped (Alg. 3) execution recomputes it per group
+    return grouped_iteration_flops(m, n, int(r), iters,
+                                   gram_shared=not grouped)
+
+
+def _qdwh_flops(m, n, *, r, kappa, grouped=False):
+    iters = _coeffs.qdwh_iter_count(float(kappa))
+    # per iteration: Gram product + n^3/3 Cholesky + two solves (the QR
+    # iterations cost more, but only the leading one or two use QR)
+    return iters * (2.0 * m * n * n + n ** 3 / 3.0 + 2.0 * m * n * n)
+
+
+def _newton_flops(m, n, *, r, kappa, grouped=False):
+    if m != n:
+        return float("inf")  # scaled Newton needs a square nonsingular A
+    # explicit pivoted-LU inverse (~2 n^3) per iteration, ~9 iterations
+    return 9.0 * 2.0 * n ** 3
+
+
+# --- plan-time static-kwarg binding (plan_fn) --------------------------------
+
+
+def _zolo_static_planfn(res):
+    """Precompute the trace-time Zolotarev schedule once, at plan time."""
+    if res.l0 is None:
+        raise ValueError(
+            "a static Zolo schedule needs l0: set SvdConfig.l0, or "
+            "l0_policy='estimate_at_plan' with a kappa= hint")
+    r = res.r if res.r is not None else _coeffs.choose_r(1.0 / res.l0)
+    sched = tuple(_coeffs.zolo_schedule_np(
+        res.l0, r, max_iters=res.max_iters or 6))
+    return {"schedule": sched,
+            "qr_mode": res.qr_mode if res.qr_mode is not None
+            else "cholqr2",
+            "qr_iters": res.qr_iters if res.qr_iters is not None else 1}
+
+
+def _qdwh_static_planfn(res):
+    if res.l0 is None:
+        raise ValueError(
+            "a static QDWH schedule needs l0: set SvdConfig.l0, or "
+            "l0_policy='estimate_at_plan' with a kappa= hint")
+    kw = {"schedule": tuple(_coeffs.qdwh_schedule_np(
+        res.l0, max_iters=res.max_iters or 8))}
+    if res.qr_iters is not None:  # None keeps the c_k > 100 heuristic
+        kw["qr_iters"] = res.qr_iters
+    return kw
+
+
+def _zolo_dynamic_planfn(res):
+    kw = {}
+    if res.r is not None:
+        kw["r"] = res.r
+    if res.l0 is not None:
+        kw["l"] = res.l0
+    if res.max_iters is not None:
+        kw["max_iters"] = res.max_iters
+    return kw
+
+
+def _qdwh_dynamic_planfn(res):
+    kw = {}
+    if res.l0 is not None:
+        kw["l"] = res.l0
+    if res.max_iters is not None:
+        kw["max_iters"] = res.max_iters
+    return kw
+
+
+def _newton_planfn(res):
+    return {"max_iters": res.max_iters} if res.max_iters is not None else {}
+
+
 register_polar("zolo", dynamic=True,
+               flops_fn=_zolo_flops, plan_fn=_zolo_dynamic_planfn,
                description="dynamic Zolo-PD, in-graph coefficients")(
     _zolo.zolo_pd)
 register_polar("zolo_static", supports_grouped=True,
                grouped_fn=_grouped_zolo_adapter,
+               flops_fn=_zolo_flops, plan_fn=_zolo_static_planfn,
                description="trace-time Zolo-PD schedule")(
     _zolo.zolo_pd_static)
 register_polar("zolo_grouped", supports_grouped=True, requires_mesh=True,
                grouped_fn=_grouped_zolo_adapter,
+               flops_fn=_zolo_flops, plan_fn=_zolo_static_planfn,
                description="paper Alg. 3: one Zolotarev term per group")(
     _grouped_zolo_adapter)
 register_polar("qdwh", dynamic=True,
+               flops_fn=_qdwh_flops, plan_fn=_qdwh_dynamic_planfn,
                description="dynamic QDWH-PD baseline")(_qdwh.qdwh_pd)
 register_polar("qdwh_static",
+               flops_fn=_qdwh_flops, plan_fn=_qdwh_static_planfn,
                description="trace-time QDWH-PD schedule")(
     _qdwh.qdwh_pd_static)
-register_polar("newton", dynamic=True,
+# baseline=True: the explicit matrix inverse each iteration makes Newton
+# the accuracy/stability baseline the paper compares against, not a
+# production pick — its flop count is kappa-insensitive and would
+# otherwise win method="auto" on every square problem.
+register_polar("newton", dynamic=True, baseline=True,
+               flops_fn=_newton_flops, plan_fn=_newton_planfn,
                description="scaled Newton PD baseline")(
     _newton.scaled_newton_pd)
 
@@ -91,44 +190,27 @@ def _jacobi_backend(h, *, nb: int = 32, **_):
     return _eig.padded_block_jacobi_eigh(h, nb=nb)
 
 
-def _dispatch_polar(a_work, method: str, mesh=None, **kw):
-    """THE polar dispatch path — registry lookup + capability routing.
-
-    ``a_work`` must already be canonical (m >= n).  Passing ``mesh=``
-    routes to the backend's grouped (Algorithm 3) execution; backends
-    without that capability reject it loudly.
-    """
-    spec = _registry.get_polar(method)
-    if mesh is not None:
-        if not spec.supports_grouped:
-            raise ValueError(
-                f"polar method {method!r} does not support grouped "
-                f"(mesh=) execution; grouped-capable methods: "
-                f"{[n for n in _registry.list_polar() if _registry.get_polar(n).supports_grouped]}")
-        return spec.grouped_fn(a_work, mesh=mesh, **kw)
-    if spec.requires_mesh:
-        raise ValueError(f"polar method {method!r} runs grouped only; "
-                         f"pass mesh=zolo_group_mesh(r)")
-    return spec.fn(a_work, **kw)
-
-
 def polar_decompose(a, method: str = "zolo", *, mesh=None, **kw):
     """Unified polar decomposition.  Returns (q, h, info) with A ~= Q H.
+
+    Thin back-compat wrapper over the plan path: the call resolves a
+    cached :class:`repro.solver.SvdPlan` for (shape, dtype, config) —
+    the ONE dispatch route from any entry point to a registered backend —
+    and executes its uncompiled implementation, so eager semantics and
+    kwarg passthrough match the underlying driver exactly.  Heavy
+    repeated traffic should hold the plan directly
+    (``repro.solver.plan``) and call its compiled entry points.
 
     H (when requested by the backend's ``want_h``) is always the *right*
     polar factor, square with trailing dim n = a.shape[-1]: for m < n
     inputs the canonical factorization A^T = Q_w H_w is re-oriented via
     H = Q_w H_w Q_w^T, so A = Q H holds in every orientation.
     """
-    a_work, transposed = _zolo.polar_canonical(a)
-    q, h, info = _dispatch_polar(a_work, method, mesh=mesh, **kw)
-    if transposed:
-        if h is not None:
-            # A = (Q_w H_w)^T = H_w Q_w^T; right factor H = Q_w H_w Q_w^T
-            # satisfies A = (Q_w^T) H with H (n, n) symmetric PSD.
-            h = jnp.einsum("...ik,...kl,...jl->...ij", q, h, q)
-        q = jnp.swapaxes(q, -1, -2)
-    return q, h, info
+    import repro.solver as _solver
+
+    pl, runtime_kw = _solver.plan_for_call(
+        a.shape[-2:], a.dtype, method=method, mesh=mesh, kw=kw)
+    return pl._polar_impl(a, extra=runtime_kw)
 
 
 def polar_svd(a, method: str = "zolo", eig_method: str = "eigh",
@@ -138,29 +220,17 @@ def polar_svd(a, method: str = "zolo", eig_method: str = "eigh",
     Returns (u, s, vh) with s descending — drop-in for
     ``jnp.linalg.svd(a, full_matrices=False)``.  ``mesh=`` routes the
     polar stage through grouped (Algorithm 3) execution for methods
-    whose registry spec advertises ``supports_grouped``.
+    whose registry spec advertises ``supports_grouped``.  Like
+    :func:`polar_decompose`, this is a thin wrapper over the single
+    ``repro.solver`` plan path; hold an ``SvdPlan`` for repeated solves.
     """
-    eig_spec = _registry.get_eig(eig_method)  # fail fast on typos
-    a_work, transposed = _zolo.polar_canonical(a)
-    kw.setdefault("want_h", True)
-    q, h, _ = _dispatch_polar(a_work, method, mesh=mesh, **kw)
-    w, v = eig_spec.fn(h, nb=nb)
+    import repro.solver as _solver
 
-    u = jnp.einsum("...mk,...kn->...mn", q, v)
-    # ascending -> descending; fold any tiny negative eigenvalue's sign
-    # into U so that s >= 0.
-    sign = jnp.where(w < 0, -1.0, 1.0).astype(a.dtype)
-    s = jnp.abs(w)
-    u = u * sign[..., None, :]
-    order = jnp.argsort(-s, axis=-1)
-    s = jnp.take_along_axis(s, order, axis=-1)
-    u = jnp.take_along_axis(u, order[..., None, :], axis=-1)
-    v = jnp.take_along_axis(v, order[..., None, :], axis=-1)
-    vh = jnp.swapaxes(v, -1, -2)
-    if transposed:
-        # a = (u s vh)^T = v s u^T
-        return vh.swapaxes(-1, -2), s, jnp.swapaxes(u, -1, -2)
-    return u, s, vh
+    kw.setdefault("want_h", True)
+    pl, runtime_kw = _solver.plan_for_call(
+        a.shape[-2:], a.dtype, method=method, eig_method=eig_method,
+        nb=nb, mesh=mesh, kw=kw)
+    return pl._svd_impl(a, extra=runtime_kw)
 
 
 @functools.partial(jax.jit, static_argnames=("nb", "max_sweeps"))
@@ -171,9 +241,17 @@ def jacobi_svd(a, nb: int = 32, max_sweeps: int = 16, tol=None):
     schedule as the eigensolver.  Requires n % nb == 0 and n//nb even.
     Returns (u, s, vh), s descending.
     """
+    if a.ndim != 2:
+        raise ValueError(f"jacobi_svd takes one (m, n) matrix; got shape "
+                         f"{a.shape}")
     m, n = a.shape
     dtype = a.dtype
-    assert n % nb == 0 and (n // nb) % 2 == 0
+    if n % nb != 0 or (n // nb) % 2 != 0:
+        # ValueError (not assert) so misuse still fails under python -O
+        raise ValueError(
+            f"jacobi_svd needs n divisible by nb with an even block "
+            f"count; got a.shape={tuple(a.shape)}, nb={nb} "
+            f"(n % nb = {n % nb}, n // nb = {n // nb})")
     b = n // nb
     sched = jnp.asarray(_eig.round_robin_schedule(b))
     tol = tol if tol is not None else 30 * float(jnp.finfo(dtype).eps)

@@ -155,20 +155,30 @@ _ITER_FNS = {
 }
 
 
-def zolo_pd_static(a, *, l0: float, r: Optional[int] = None,
-                   max_iters: int = 6, want_h: bool = False,
-                   qr_mode: str = "cholqr2", qr_iters: int = 1,
-                   hermitian_source=None):
+def zolo_pd_static(a, *, l0: Optional[float] = None,
+                   r: Optional[int] = None, max_iters: int = 6,
+                   want_h: bool = False, qr_mode: str = "cholqr2",
+                   qr_iters: int = 1, hermitian_source=None,
+                   schedule=None):
     """Unrolled Zolo-PD with a trace-time coefficient schedule.
 
     ``a`` must be pre-scaled (sigma_max <= 1) with singular values in
     [l0, 1].  The first ``qr_iters`` iterations use ``qr_mode``
     ("cholqr2" | "householder" | "chol"); the rest use the shared-Gram
-    Cholesky variant.  Returns (Q, H or None, PolarInfo).
+    Cholesky variant.  A precomputed ``schedule`` (sequence of
+    :class:`repro.core.coeffs.ZoloIteration`, e.g. bound once by an
+    ``SvdPlan``) takes precedence over ``l0``/``r``/``max_iters``.
+    Returns (Q, H or None, PolarInfo).
     """
-    if r is None:
-        r = _coeffs.choose_r(1.0 / float(l0))
-    sched = _coeffs.zolo_schedule_np(float(l0), r, max_iters=max_iters)
+    if schedule is not None:
+        sched = list(schedule)
+    elif l0 is not None:
+        if r is None:
+            r = _coeffs.choose_r(1.0 / float(l0))
+        sched = _coeffs.zolo_schedule_np(float(l0), r, max_iters=max_iters)
+    else:
+        raise ValueError("zolo_pd_static needs l0= or a precomputed "
+                         "schedule=")
     coeff_dtype = jnp.promote_types(a.dtype, jnp.float32)
     x = a
     for i, it in enumerate(sched):

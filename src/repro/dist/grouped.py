@@ -48,9 +48,13 @@ def zolo_group_mesh(r: int, devices=None) -> Mesh:
         devices = jax.devices()
     ndev = len(devices)
     if r < 1 or ndev % r != 0:
+        divisors = [d for d in range(1, ndev + 1) if ndev % d == 0]
         raise ValueError(
             f"cannot split {ndev} devices into r={r} Zolotarev groups; "
-            f"r must divide the device count")
+            f"r must divide the device count (valid r for {ndev} "
+            f"devices: {divisors})")
+    # r == ndev is valid: every group is a single device and the "sep"
+    # axis has size 1 — the degenerate mesh single-device CI runs on.
     arr = np.asarray(devices).reshape(r, ndev // r)
     return Mesh(arr, ("zolo", "sep"))
 
@@ -62,27 +66,34 @@ _TERM_FNS = {
 }
 
 
-def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: float,
+def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
                            r: Optional[int] = None, max_iters: int = 6,
                            qr_mode: str = "cholqr2", qr_iters: int = 1,
-                           alpha=None, return_info: bool = False):
+                           alpha=None, return_info: bool = False,
+                           schedule=None):
     """Grouped (Alg. 3) Zolo-PD orthogonal factor of ``a`` (m >= n).
 
     ``a`` must have singular values in [l0 * alpha, alpha] (alpha=1 when
     omitted, i.e. pre-scaled like :func:`repro.core.zolo.zolo_pd_static`).
     ``mesh`` must come from :func:`zolo_group_mesh` with a "zolo" axis of
     size ``r``.  ``qr_mode`` / ``qr_iters`` select the stable-regime term
-    for the first iterations exactly as in ``zolo_pd_static``.  Returns Q
-    only (or (Q, PolarInfo) with ``return_info=True``); form H with
-    ``repro.core.form_h(q, a)`` (the paper forms H the same way, after
-    the combine).
+    for the first iterations exactly as in ``zolo_pd_static``.  A
+    precomputed ``schedule`` (sequence of
+    :class:`repro.core.coeffs.ZoloIteration`, e.g. bound once by an
+    ``SvdPlan``) takes precedence over ``l0``/``max_iters`` — the plan
+    builds it at plan time and this driver only lays it out over the
+    mesh.  Returns Q only (or (Q, PolarInfo) with ``return_info=True``);
+    form H with ``repro.core.form_h(q, a)`` (the paper forms H the same
+    way, after the combine).
     """
     if a.ndim != 2:
         raise ValueError(f"grouped Zolo-PD takes one matrix; got {a.shape}")
     if "zolo" not in mesh.axis_names:
         raise ValueError(f"mesh has no 'zolo' axis: {mesh.axis_names}")
+    if schedule is not None and not len(schedule):
+        raise ValueError("schedule= is empty: nothing to iterate")
     if r is None:
-        r = mesh.shape["zolo"]
+        r = schedule[0].r if schedule is not None else mesh.shape["zolo"]
     if mesh.shape["zolo"] != r:
         raise ValueError(
             f"mesh 'zolo' axis has size {mesh.shape['zolo']} != r={r}")
@@ -90,7 +101,17 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: float,
         raise ValueError(f"unknown qr_mode: {qr_mode!r} "
                          f"(one of {sorted(_TERM_FNS)})")
 
-    sched = _coeffs.zolo_schedule_np(float(l0), r, max_iters=max_iters)
+    if schedule is not None:
+        sched = list(schedule)
+        if any(it.r != r for it in sched):
+            raise ValueError(
+                f"schedule order {[it.r for it in sched]} does not match "
+                f"the mesh 'zolo' axis of size {r}")
+    elif l0 is not None:
+        sched = _coeffs.zolo_schedule_np(float(l0), r, max_iters=max_iters)
+    else:
+        raise ValueError("grouped Zolo-PD needs a static l0= or a "
+                         "precomputed schedule=")
     coeff_dtype = jnp.promote_types(a.dtype, jnp.float32)
     # (iters, r): column j belongs to group j
     c_odd = jnp.asarray([it.c[0::2] for it in sched], coeff_dtype)

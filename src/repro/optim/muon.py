@@ -15,6 +15,11 @@ mesh exactly like the paper's process groups.  ``method`` selects
 {"zolo", "qdwh", "ns5"} so the paper's baseline comparisons also run
 inside the training loop.
 
+The factorization runs through one ``repro.solver`` SvdPlan per
+parameter *kind* (shape, dtype, config): the Zolotarev schedule is built
+once at plan time and the compiled executable is cached, so optimizer
+steps after the first perform zero retraces.
+
 Momentum matrices are near-isotropic in practice; the schedule assumes
 sigma_min/sigma_max >= l0 (default 1e-3) after sigma_max-normalization.
 Smaller singular values still converge monotonically (the composed
@@ -31,13 +36,12 @@ Zolo-PD per parameter *kind* per step.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import norms as _norms
-from repro.core import zolo as _zolo
 from repro.dist.sharding import hint
 
 
@@ -80,6 +84,34 @@ def _ns5(x, steps: int = 5):
     return x
 
 
+@functools.lru_cache(maxsize=None)
+def _polar_plan(method: str, rows: int, cols: int, r: int, l0: float,
+                max_iters: int, polar_dtype: str):
+    """One cached SvdPlan per parameter *kind* (shape, dtype, config).
+
+    ``scale="power"`` is the sharp 1.05x power-iteration normalization
+    that keeps the spectrum inside [l0, 1] so the static schedule's
+    iteration count is honest; ``compute_dtype="float32"`` factorizes in
+    f32 per shard and casts back to ``polar_dtype``.  The lru_cache pins
+    the plan (and its compiled executables) per kind regardless of
+    pressure on the solver's global LRU, so every optimizer step after
+    the first reuses one executable — no per-step schedule rebuilds or
+    retraces.
+    """
+    import repro.solver as _solver
+
+    if method == "zolo":
+        cfg = _solver.SvdConfig(method="zolo_static", r=r, l0=l0,
+                                max_iters=max_iters, qr_mode="cholqr2",
+                                qr_iters=1, scale="power",
+                                compute_dtype="float32")
+    else:  # qdwh
+        cfg = _solver.SvdConfig(method="qdwh_static", l0=l0,
+                                max_iters=max_iters + 2, scale="power",
+                                compute_dtype="float32")
+    return _solver.plan(cfg, (rows, cols), jnp.dtype(polar_dtype))
+
+
 def orthogonalize(m, method: str = "zolo", r: int = 2, l0: float = 1e-3,
                   max_iters: int = 4, polar_dtype: str = "float32"):
     """Batched msign/polar factor of m (..., rows, cols)."""
@@ -100,24 +132,8 @@ def orthogonalize(m, method: str = "zolo", r: int = 2, l0: float = 1e-3,
     else:
         m2 = hint(m2, "opt_stack", None, "opt_rows")
 
-    def one(mat):
-        mat = mat.astype(jnp.float32)  # factorize in f32 per shard
-        work, transposed = _zolo.polar_canonical(mat)
-        # sharp normalization keeps the spectrum inside [l0, 1] so the
-        # static schedule's iteration count is honest
-        alpha = 1.05 * _norms.sigma_max_power(work, iters=8) + 1e-12
-        x0 = (work / alpha).astype(work.dtype)
-        if method == "zolo":
-            q, _, _ = _zolo.zolo_pd_static(
-                x0, l0=l0, r=r, max_iters=max_iters, want_h=False,
-                qr_mode="cholqr2", qr_iters=1)
-        else:  # qdwh
-            from repro.core import qdwh as _qdwh
-            q, _, _ = _qdwh.qdwh_pd_static(x0, l0=l0, max_iters=max_iters + 2,
-                                           want_h=False)
-        return jnp.swapaxes(q, -1, -2) if transposed else q
-
-    q = jax.vmap(one)(m2).astype(jnp.dtype(polar_dtype))
+    plan = _polar_plan(method, rows, cols, r, l0, max_iters, polar_dtype)
+    q, _, _ = plan.polar_batched(m2, want_h=False)
     if rows >= cols:
         q = hint(q, "opt_stack", "opt_rows", None)
     else:

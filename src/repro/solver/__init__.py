@@ -1,0 +1,35 @@
+"""repro.solver — the plan/execute SVD surface.
+
+    cfg  = SvdConfig(method="auto", kappa=1e8, l0_policy="estimate_at_plan")
+    p    = plan(cfg, a.shape, a.dtype)        # resolve + precompute once
+    u, s, vh = p.svd(a)                       # compiled; repeats don't retrace
+
+Method/mode/r selection, schedule precomputation, mesh binding, and the
+compiled-executable cache live in :mod:`repro.solver.planner`; the
+frozen configuration in :mod:`repro.solver.config`.  Backends register in
+:mod:`repro.core.registry` (capability flags + ``flops_fn``/``plan_fn``
+plan-time hooks) — never with if/elif chains.
+"""
+
+import repro.core  # noqa: F401  (populates the solver registry)
+from repro.solver.config import SvdConfig
+from repro.solver.planner import (
+    PlanResolution,
+    SvdPlan,
+    clear_plan_cache,
+    plan,
+    plan_cache_stats,
+    plan_for_call,
+    trace_count,
+)
+
+__all__ = [
+    "PlanResolution",
+    "SvdConfig",
+    "SvdPlan",
+    "clear_plan_cache",
+    "plan",
+    "plan_cache_stats",
+    "plan_for_call",
+    "trace_count",
+]

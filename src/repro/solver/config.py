@@ -1,0 +1,112 @@
+"""SvdConfig: the frozen, hashable description of one solver configuration.
+
+The paper's pipeline is plan-then-run: pick the Zolotarev order r from
+the condition number (Table 1), build the coefficient schedule once,
+allocate the r process-group contexts, then iterate.  ``SvdConfig``
+captures everything that selection depends on — method, execution mode,
+r, the ``l0`` policy, QR-regime knobs, eig backend, dtype policy — as a
+frozen dataclass, so a config is a dict key: ``repro.solver.plan()`` caches
+one compiled executable per (shape, dtype, config) and repeated solves
+never retrace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+MODES = ("auto", "static", "dynamic", "grouped")
+L0_POLICIES = ("given", "estimate_at_plan", "runtime")
+SCALES = ("none", "power", "bound")
+
+
+@dataclasses.dataclass(frozen=True)
+class SvdConfig:
+    """Frozen solver configuration; hashable, so it keys the plan cache.
+
+    method       registry polar backend name, or "auto" (capability flags
+                 + per-spec ``flops_fn`` cost model pick the cheapest).
+    eig_method   registry eigensolver for the H-stage of Algorithm 2.
+    mode         "static" (trace-time schedule), "dynamic" (runtime
+                 conditioning in-graph), "grouped" (Algorithm 3 over a
+                 ("zolo", "sep") mesh), or "auto": grouped when a mesh is
+                 passed to ``plan``, dynamic when ``l0_policy`` is
+                 "runtime", else static.  With an explicit (non-"auto")
+                 method, "auto" simply follows that backend's nature.
+    r            Zolotarev order / process-group count; None picks it
+                 from the conditioning per paper Table 1 (``choose_r``).
+    l0           lower bound on sigma_min of the (pre-scaled) input.
+    l0_policy    "given" (use ``l0`` as supplied), "estimate_at_plan"
+                 (derive ``l0 = 0.9 / kappa`` from the ``kappa`` hint at
+                 plan time), or "runtime" (a dynamic backend estimates
+                 the bound in-graph; ``l0`` must be None).
+    kappa        condition-number hint used by plan-time selection
+                 (auto method scoring, r choice, l0 estimation).
+    max_iters    schedule length cap; None keeps each backend's default.
+    qr_mode      stable-regime factorization for the first iterations
+                 ("cholqr2" | "householder" | "chol"); None keeps the
+                 backend default (Zolo family: "cholqr2").
+    qr_iters     how many leading iterations use ``qr_mode``; None keeps
+                 the backend default (Zolo family: 1; QDWH: its
+                 c_k > 100 switching heuristic).
+    nb           block size for the block-Jacobi eigensolver.
+    scale        in-graph pre-scaling applied by the plan for backends
+                 with trace-time schedules (dynamic backends self-scale):
+                 "power" (default: sharp 1.05x power-iteration bound —
+                 the ZoloMuon setting; safe for un-normalized inputs and
+                 compatible with the 0.9 safety in estimated l0),
+                 "bound" (guaranteed sqrt(norm1*norminf) cap), "none"
+                 (NO scaling: the caller guarantees sigma_max <= 1 with
+                 singular values in [l0, 1] — a static plan fed a larger
+                 matrix under "none" silently loses accuracy; the legacy
+                 ``polar_svd``/``polar_decompose`` wrappers pin "none"
+                 because their callers always pre-scaled).
+    compute_dtype  factorize in this dtype, cast results back to the
+                 plan dtype; None computes in the input dtype.
+    extra        extra backend kwargs as a sorted tuple of (name, value)
+                 pairs — the hashable passthrough for knobs the config
+                 does not model (e.g. ``alpha`` for dynamic drivers).
+    """
+
+    method: str = "auto"
+    eig_method: str = "eigh"
+    mode: str = "auto"
+    r: Optional[int] = None
+    l0: Optional[float] = None
+    l0_policy: str = "given"
+    kappa: Optional[float] = None
+    max_iters: Optional[int] = None
+    qr_mode: Optional[str] = None
+    qr_iters: Optional[int] = None
+    nb: int = 32
+    scale: str = "power"
+    compute_dtype: Optional[str] = None
+    extra: Tuple[Tuple[str, object], ...] = ()
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode={self.mode!r} not in {MODES}")
+        if self.l0_policy not in L0_POLICIES:
+            raise ValueError(
+                f"l0_policy={self.l0_policy!r} not in {L0_POLICIES}")
+        if self.scale not in SCALES:
+            raise ValueError(f"scale={self.scale!r} not in {SCALES}")
+        if self.l0_policy == "runtime" and self.l0 is not None:
+            raise ValueError("l0_policy='runtime' estimates the bound "
+                             "in-graph; leave l0=None (or use 'given')")
+        extra = self.extra
+        if isinstance(extra, dict):
+            extra = extra.items()
+        extra = tuple(sorted((str(k), v) for k, v in extra))
+        try:
+            hash(extra)
+        except TypeError:
+            raise ValueError(
+                "SvdConfig.extra must be hashable (plan configs key the "
+                "executable cache); pass array-valued kwargs at call "
+                f"time instead: {extra!r}") from None
+        object.__setattr__(self, "extra", extra)
+
+    def replace(self, **changes) -> "SvdConfig":
+        """A copy with the given fields replaced (configs are frozen)."""
+        return dataclasses.replace(self, **changes)

@@ -139,6 +139,21 @@ def test_zolo_group_mesh_and_registry_routing_subprocess():
     run_multidevice_script(_MESH_SCRIPT, "MESH_OK", timeout=300)
 
 
+def test_zolo_group_mesh_single_device_and_error_lists_divisors():
+    """r == ndev is a valid degenerate mesh (sep axis of size 1) — the
+    single-device CI case; invalid r errors name the valid divisors."""
+    from repro.dist import zolo_group_mesh
+
+    ndev = len(jax.devices())  # 1 in the main test process
+    mesh = zolo_group_mesh(ndev)
+    assert mesh.shape == {"zolo": ndev, "sep": 1}
+    divisors = [d for d in range(1, ndev + 1) if ndev % d == 0]
+    with pytest.raises(ValueError, match=str(divisors).replace("[", r"\[")):
+        zolo_group_mesh(ndev + 7)
+    with pytest.raises(ValueError, match="valid r"):
+        zolo_group_mesh(0)
+
+
 # --- registry ----------------------------------------------------------------
 
 

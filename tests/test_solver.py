@@ -1,0 +1,273 @@
+"""repro.solver plan/execute API: SvdConfig -> SvdPlan, caching, auto mode."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as C
+import repro.solver as S
+from repro.core import registry
+
+from conftest import make_matrix
+
+
+def test_plan_svd_matches_reference():
+    kappa = 1e4
+    a = make_matrix(96, 64, kappa, seed=1)
+    cfg = S.SvdConfig(method="zolo_static", l0=0.9 / kappa, r=2)
+    p = S.plan(cfg, a.shape, a.dtype)
+    assert p.method == "zolo_static" and p.mode == "static" and p.r == 2
+    assert p.schedule is not None and len(p.schedule) >= 1
+    u, s, vh = p.svd(a)
+    s0 = np.linalg.svd(np.asarray(a), compute_uv=False)
+    np.testing.assert_allclose(np.asarray(s), s0, atol=1e-12)
+    assert float(C.svd_residual(a, u, s, vh)) < 5e-13
+    assert float(C.orthogonality(u)) < 1e-13
+
+
+def test_plan_polar_matches_reference():
+    kappa = 1e3
+    a = make_matrix(80, 48, kappa, seed=2)
+    p = S.plan(S.SvdConfig(method="zolo_static", l0=0.9 / kappa),
+               a.shape, a.dtype)
+    q, h, info = p.polar(a)
+    assert int(info.iterations) == len(p.schedule)
+    assert float(C.orthogonality(q)) < 1e-13
+    rec = float(jnp.linalg.norm(q @ h - a) / jnp.linalg.norm(a))
+    assert rec < 1e-12
+
+
+def test_plan_identity_and_zero_retrace():
+    """The repeated-solve contract: identical (shape, dtype, config) hits
+    the same plan object and the second execution performs no retrace."""
+    kappa = 1e4
+    cfg = S.SvdConfig(method="zolo_static", l0=0.9 / kappa, r=2)
+    p1 = S.plan(cfg, (96, 64), jnp.float64)
+    p2 = S.plan(S.SvdConfig(method="zolo_static", l0=0.9 / kappa, r=2),
+                (96, 64), jnp.float64)
+    assert p1 is p2
+
+    a = make_matrix(96, 64, kappa, seed=3)
+    b = make_matrix(96, 64, kappa, seed=4)
+    u1, s1, _ = p1.svd(a)  # may compile
+    t0 = S.trace_count()
+    u2, s2, _ = p1.svd(b)
+    assert S.trace_count() == t0, "second plan.svd call retraced"
+    # re-planning the same config must reuse the cached executable too
+    p3 = S.plan(cfg, (96, 64), jnp.float64)
+    p3.svd(a)
+    assert S.trace_count() == t0
+    np.testing.assert_allclose(
+        np.asarray(s2), np.linalg.svd(np.asarray(b), compute_uv=False),
+        atol=1e-12)
+
+
+def test_plan_polar_no_retrace_and_distinct_want_h():
+    kappa = 1e3
+    cfg = S.SvdConfig(method="qdwh_static", l0=0.9 / kappa)
+    p = S.plan(cfg, (64, 48), jnp.float64)
+    a = make_matrix(64, 48, kappa, seed=5)
+    q1, h1, _ = p.polar(a)
+    t0 = S.trace_count()
+    q2, h2, _ = p.polar(a)
+    assert S.trace_count() == t0
+    qn, hn, _ = p.polar(a, want_h=False)  # separate executable
+    assert hn is None and h1 is not None
+    assert S.trace_count() == t0 + 1
+    p.polar(a, want_h=False)
+    assert S.trace_count() == t0 + 1
+
+
+def test_auto_mode_runtime_l0_picks_dynamic():
+    """l0_policy='runtime' -> a dynamic (in-graph conditioning) backend."""
+    cfg = S.SvdConfig(l0_policy="runtime")
+    p = S.plan(cfg, (64, 48), jnp.float64)
+    assert p.mode == "dynamic"
+    assert registry.get_polar(p.method).dynamic
+    a = make_matrix(64, 48, 1e3, seed=6)
+    u, s, vh = p.svd(a)
+    np.testing.assert_allclose(
+        np.asarray(s), np.linalg.svd(np.asarray(a), compute_uv=False),
+        atol=1e-11)
+
+
+def test_auto_dynamic_square_skips_baselines():
+    """Square problems must not auto-select the Newton comparison
+    baseline (explicit matrix inverses); baselines are explicit-only."""
+    p = S.plan(S.SvdConfig(l0_policy="runtime"), (96, 96), jnp.float64)
+    spec = registry.get_polar(p.method)
+    assert spec.dynamic and not spec.baseline and not spec.is_oracle
+    a = make_matrix(96, 96, 1e8, seed=11)
+    u, s, vh = p.svd(a)
+    assert float(C.svd_residual(a, u, s, vh)) < 5e-13
+    # newton remains reachable explicitly
+    q, h, info = C.polar_decompose(a, method="newton")
+    assert float(C.orthogonality(q)) < 1e-12
+
+
+def test_auto_mode_mesh_picks_grouped():
+    """mesh= -> grouped mode and a grouped-capable method; r == ndev
+    (sep axis of size 1) runs on single-device CI."""
+    from repro.dist import zolo_group_mesh
+
+    mesh = zolo_group_mesh(1)  # 1 group x all devices of this process
+    cfg = S.SvdConfig(kappa=1e3, l0_policy="estimate_at_plan", r=1)
+    p = S.plan(cfg, (64, 32), jnp.float64, mesh=mesh)
+    assert p.mode == "grouped"
+    assert registry.get_polar(p.method).supports_grouped
+    assert p.r == 1 and p.l0 == pytest.approx(0.9e-3)
+    a = make_matrix(64, 32, 1e3, seed=7)
+    q, h, info = p.polar(a)
+    assert float(C.orthogonality(q)) < 1e-13
+    rec = float(jnp.linalg.norm(q @ h - a) / jnp.linalg.norm(a))
+    assert rec < 1e-12
+
+
+def test_auto_static_selects_by_cost_model():
+    cfg = S.SvdConfig(kappa=1e8, l0_policy="estimate_at_plan")
+    p = S.plan(cfg, (128, 96), jnp.float64)
+    assert p.mode == "static"
+    spec = registry.get_polar(p.method)
+    assert not spec.dynamic and not spec.is_oracle
+    assert p.flops_estimate is not None and p.flops_estimate > 0
+    # the pick is the flops_fn argmin over static-capable backends
+    others = [registry.get_polar(n) for n in registry.list_polar()]
+    for s in others:
+        if s.is_oracle or s.dynamic or s.requires_mesh or s.flops_fn is None:
+            continue
+        assert p.flops_estimate <= float(
+            s.flops_fn(128, 96, r=p.r, kappa=1e8)) * (1 + 1e-12)
+
+
+def test_svd_batched_reuses_one_executable():
+    kappa = 1e3
+    cfg = S.SvdConfig(method="zolo_static", l0=0.9 / kappa, r=2)
+    p = S.plan(cfg, (48, 32), jnp.float64)
+    a = jnp.stack([make_matrix(48, 32, kappa, seed=s) for s in (1, 2, 3)])
+    u, s, vh = p.svd_batched(a)
+    assert u.shape == (3, 48, 32) and s.shape == (3, 32)
+    t0 = S.trace_count()
+    p.svd_batched(a)
+    assert S.trace_count() == t0
+    for i in range(3):
+        s0 = np.linalg.svd(np.asarray(a[i]), compute_uv=False)
+        np.testing.assert_allclose(np.asarray(s[i]), s0, atol=1e-12)
+
+
+def test_unscaled_input_safe_by_default():
+    """The default scale='power' makes static plans correct for
+    un-normalized inputs (the documented flagship path)."""
+    kappa = 1e4
+    a = 5.0 * make_matrix(96, 96, kappa, seed=10)  # sigma_max = 5
+    p = S.plan(S.SvdConfig(kappa=kappa, l0_policy="estimate_at_plan"),
+               a.shape, a.dtype)
+    u, s, vh = p.svd(a)
+    s0 = np.linalg.svd(np.asarray(a), compute_uv=False)
+    np.testing.assert_allclose(np.asarray(s), s0, atol=1e-10)
+    assert float(C.orthogonality(u)) < 1e-13
+
+
+def test_unconsumed_config_knobs_fail_loudly():
+    """An explicitly-set knob the chosen backend's plan does not consume
+    is a configuration error naming the method, not a silent drop."""
+    with pytest.raises(ValueError, match="'qdwh' does not use r="):
+        S.plan(S.SvdConfig(method="qdwh", r=4), (16, 16), jnp.float64)
+    with pytest.raises(ValueError, match="does not use qr_mode="):
+        C.polar_decompose(jnp.eye(16), method="zolo", qr_mode="chol")
+    with pytest.raises(ValueError, match="does not use l0="):
+        C.polar_decompose(jnp.eye(16), method="newton", l0=1e-3)
+
+
+def test_plan_scale_power_handles_unscaled_input():
+    """scale='power' lets a static plan take an un-normalized matrix and
+    still return the singular values of the original input."""
+    kappa = 1e3
+    a = 37.0 * make_matrix(64, 48, kappa, seed=8)  # sigma_max = 37
+    p = S.plan(S.SvdConfig(method="zolo_static", l0=0.9 / kappa,
+                           scale="power"), a.shape, a.dtype)
+    u, s, vh = p.svd(a)
+    s0 = np.linalg.svd(np.asarray(a), compute_uv=False)
+    np.testing.assert_allclose(np.asarray(s), s0, atol=1e-10)
+    q, h, _ = p.polar(a)
+    rec = float(jnp.linalg.norm(q @ h - a) / jnp.linalg.norm(a))
+    assert rec < 1e-12
+
+
+def test_plan_validation_errors():
+    cfg = S.SvdConfig(method="zolo_static", l0=1e-3)
+    p = S.plan(cfg, (32, 16), jnp.float64)
+    with pytest.raises(ValueError, match="shape"):
+        p.svd(jnp.zeros((16, 16)))
+    with pytest.raises(ValueError, match="dtype"):
+        p.svd(jnp.zeros((32, 16), jnp.float32))
+    with pytest.raises(ValueError, match="mesh"):
+        S.plan(S.SvdConfig(mode="grouped", l0=1e-3), (32, 16),
+               jnp.float64)
+    with pytest.raises(ValueError, match="dynamic"):
+        S.plan(S.SvdConfig(method="zolo", mode="static", l0=1e-3),
+               (32, 16), jnp.float64)
+    with pytest.raises(ValueError, match="l0"):
+        S.plan(S.SvdConfig(method="zolo_static"), (32, 16), jnp.float64)
+    with pytest.raises(ValueError, match="kappa"):
+        S.plan(S.SvdConfig(l0_policy="estimate_at_plan"), (32, 16),
+               jnp.float64)
+    with pytest.raises(ValueError, match="runtime"):
+        S.SvdConfig(l0_policy="runtime", l0=1e-3)
+    with pytest.raises(ValueError, match="hashable"):
+        S.SvdConfig(extra=(("x", jnp.zeros(3)),))
+
+
+def test_config_is_frozen_and_replaceable():
+    cfg = S.SvdConfig(method="zolo_static", l0=1e-3)
+    with pytest.raises(Exception):
+        cfg.method = "qdwh"
+    cfg2 = cfg.replace(r=4)
+    assert cfg2.r == 4 and cfg.r is None and cfg2.l0 == 1e-3
+    assert hash(cfg) != hash(cfg2)
+    # dict-valued extra is normalized to a sorted hashable tuple
+    assert S.SvdConfig(extra={"b": 2, "a": 1}).extra == (("a", 1), ("b", 2))
+
+
+def test_orthogonalize_reuses_plan_across_steps():
+    """The ZoloMuon path: repeated steps at one parameter kind reuse one
+    compiled executable (no per-step schedule rebuild or retrace)."""
+    from repro.optim.muon import orthogonalize
+
+    rng = np.random.default_rng(0)
+    m1 = jnp.asarray(rng.standard_normal((64, 48)), jnp.float32)
+    m2 = jnp.asarray(rng.standard_normal((64, 48)), jnp.float32)
+    orthogonalize(m1)  # may compile
+    t0 = S.trace_count()
+    o = orthogonalize(m2)
+    assert S.trace_count() == t0, "second optimizer step retraced"
+    # the muon plan is pinned per parameter kind: sweeping many other
+    # configs through the solver's global LRU must not evict it
+    for i in range(130):
+        S.plan(S.SvdConfig(method="qdwh_static", l0=1e-3 / (i + 1)),
+               (8, 8), jnp.float64)
+    t1 = S.trace_count()
+    o = orthogonalize(m2)
+    assert S.trace_count() == t1, "muon plan evicted under LRU pressure"
+    u, _, vt = np.linalg.svd(np.asarray(m2, np.float64),
+                             full_matrices=False)
+    np.testing.assert_allclose(np.asarray(o, np.float64), u @ vt,
+                               atol=2e-3)
+
+
+def test_wrappers_share_the_plan_path():
+    """polar_svd / polar_decompose resolve through the same plan cache:
+    a repeated wrapper call must not re-resolve into a new plan."""
+    kappa = 1e3
+    a = make_matrix(48, 32, kappa, seed=9)
+    C.polar_svd(a, method="zolo_static", l0=0.9 / kappa, r=2)
+    stats0 = S.plan_cache_stats()
+    C.polar_svd(a, method="zolo_static", l0=0.9 / kappa, r=2)
+    stats1 = S.plan_cache_stats()
+    assert stats1["plans"] == stats0["plans"]
+    assert stats1["plan_hits"] == stats0["plan_hits"] + 1
+    # a direct plan() with the same knobs shares the wrapper's plan
+    # (wrappers pin scale='none': their callers pre-scale)
+    S.plan(S.SvdConfig(method="zolo_static", l0=0.9 / kappa, r=2,
+                       scale="none"), a.shape, a.dtype)
+    assert S.plan_cache_stats()["plans"] == stats1["plans"]

@@ -65,6 +65,18 @@ def test_polar_svd_with_jacobi_eig():
     np.testing.assert_allclose(np.asarray(s), s0, atol=1e-12)
 
 
+def test_jacobi_svd_shape_validation():
+    """Misuse raises ValueError with the offending shapes (not a bare
+    assert, so it still fails under python -O)."""
+    a = make_matrix(32, 24, 10.0, seed=4)
+    with pytest.raises(ValueError, match=r"nb=10"):
+        C.jacobi_svd(a, nb=10)  # 24 % 10 != 0
+    with pytest.raises(ValueError, match=r"even block count"):
+        C.jacobi_svd(a, nb=8)  # 24 // 8 == 3 blocks: odd
+    with pytest.raises(ValueError, match="one"):
+        C.jacobi_svd(jnp.zeros((2, 16, 16)), nb=8)
+
+
 def test_jacobi_svd_baseline():
     a = make_matrix(100, 64, 50.0, seed=1)
     u, s, vh = C.jacobi_svd(a, nb=16)
