@@ -52,3 +52,26 @@ def make_matrix(n: int, kappa: float, m: int = None, seed: int = 0,
     v, _ = np.linalg.qr(rng.standard_normal((n, k)))
     s = np.geomspace(1.0, 1.0 / kappa, k)
     return jnp.asarray((u * s) @ v.T, dtype=dtype)
+
+
+def kernel_vs_xla_polar(a, *, l0, r=2):
+    """Time the kernel-backed (zolo_pallas) vs XLA (zolo_static) polar
+    solve of the pre-scaled matrix ``a`` through ``repro.solver`` plans.
+
+    One comparison protocol for every suite (kernels, pd_compare):
+    returns (t_xla_s, t_ker_s, max_abs_err, kernel_plan).
+    """
+    import jax.numpy as jnp
+
+    import repro.solver as S
+
+    cfg_kw = dict(l0=l0, r=r, scale="none")
+    p_xla = S.plan(S.SvdConfig(method="zolo_static", **cfg_kw),
+                   a.shape, a.dtype)
+    p_ker = S.plan(S.SvdConfig(method="zolo_pallas", **cfg_kw),
+                   a.shape, a.dtype)
+    t_xla = time_fn(lambda x: p_xla.polar(x, want_h=False)[0], a)
+    t_ker = time_fn(lambda x: p_ker.polar(x, want_h=False)[0], a)
+    err = float(jnp.abs(p_ker.polar(a, want_h=False)[0]
+                        - p_xla.polar(a, want_h=False)[0]).max())
+    return t_xla, t_ker, err, p_ker

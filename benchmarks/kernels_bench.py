@@ -3,9 +3,18 @@
 Wall-clock in interpret mode is meaningless (Python-executed kernel body);
 the reported numbers are oracle wall-clock + the VMEM working-set model of
 the chosen BlockSpecs — the structural facts that transfer to TPU.
+
+``run`` also drives the registered ``zolo_pallas`` backend end-to-end
+against the XLA ``zolo_static`` path through ``repro.solver`` plans and
+writes the comparison as a ``BENCH_kernels.json`` record (backend, tile
+sizes, parity error, wall-clock): the machine-readable artifact a TPU
+run regenerates with compiled kernels.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
@@ -13,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from repro.kernels import ops, ref
 from benchmarks.common import BENCH_N, emit, time_fn
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_KERNELS_JSON", "BENCH_kernels.json")
 
 
 def vmem_working_set(bn, bk, bm=None, dtype_bytes=4):
@@ -53,6 +64,61 @@ def run():
     emit("kernels.polar_update.hbm_traffic_saving", 0.0,
          f"{naive / fused:.2f}x")
     flash_bench()
+    end_to_end()
+
+
+def end_to_end():
+    """zolo_pallas vs zolo_static through repro.solver plans: the full
+    polar solve, kernel ops vs XLA ops, parity + wall-clock, written to
+    BENCH_kernels.json.  Interpret-mode wall-clock only shows the
+    Python-execution overhead on CPU; the JSON records the backend so a
+    TPU run of the same file is directly comparable."""
+    from repro.core import orthogonality
+    from repro.kernels.ops import _pick_tile
+    from benchmarks.common import kernel_vs_xla_polar
+
+    n = min(BENCH_N, 256)
+    m = 2 * n
+    kappa = 1e3
+    rng = np.random.default_rng(3)
+    u, _ = np.linalg.qr(rng.standard_normal((m, n)))
+    v, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    s = np.geomspace(1.0, 1.0 / kappa, n)
+    a = jnp.asarray((u * s) @ v.T, jnp.float32)
+
+    t_xla, t_ker, err, p_ker = kernel_vs_xla_polar(a, l0=0.9 / kappa, r=2)
+    q_ker = p_ker.polar(a, want_h=False)[0]
+    backend = jax.default_backend()
+    interpret = backend != "tpu"
+    emit("kernels.zolo_pallas.end_to_end_vs_xla", t_ker * 1e6,
+         f"xla={t_xla * 1e6:.1f}us;max_err={err:.2e};"
+         f"interpret={interpret}")
+
+    # the backend-default tile *requests*; _pick_tile shrinks them to
+    # divide the padded problem — record what actually ran
+    requested = {"bn": 256, "bk": 512, "bm": 256}
+    selected = {"bn": _pick_tile(n, requested["bn"]),
+                "bk": _pick_tile(m, requested["bk"]),
+                "bm": _pick_tile(m, requested["bm"])}
+    record = {
+        "suite": "kernels_end_to_end",
+        "backend": backend,
+        "interpret": interpret,
+        "shape": [m, n],
+        "dtype": "float32",
+        "kappa": kappa,
+        "r": 2,
+        "iterations": len(p_ker.schedule),
+        "tiles_requested": requested,
+        "tiles_selected": selected,
+        "zolo_static_us": t_xla * 1e6,
+        "zolo_pallas_us": t_ker * 1e6,
+        "max_err_vs_xla": err,
+        "orth_zolo_pallas": float(orthogonality(q_ker)),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("kernels.zolo_pallas.json_record", 0.0, BENCH_JSON)
 
 
 def flash_bench():

@@ -37,6 +37,22 @@ def run():
         emit(f"table6.{name}.iters", 0.0,
              f"qdwh={int(iq.iterations)};zolo_r2={int(iz.iterations)}")
 
+    # kernel-backed driver vs the XLA path, end to end through plans
+    # (small n: off-TPU the Pallas kernels run in interpret mode, so the
+    # wall-clock here measures Python kernel-body execution — the parity
+    # number is the transferable fact; TPU wall-clock comes from
+    # BENCH_kernels.json regenerated on hardware).
+    import jax.numpy as jnp
+
+    from benchmarks.common import kernel_vs_xla_polar
+
+    nk = min(n, 256)
+    kappa = 9.06e3
+    ak = jnp.asarray(make_matrix(nk, kappa, m=nk, seed=3), jnp.float32)
+    t_xla, t_ker, err, _ = kernel_vs_xla_polar(ak, l0=0.9 / kappa, r=2)
+    emit("table6.zolo_pallas_vs_xla", t_ker * 1e6,
+         f"xla={t_xla * 1e6:.1f}us;max_err={err:.2e}")
+
     # parallel cost model (per-group critical path), paper's setting r=2:
     m = n
     iters_q, iters_z = 5, 4

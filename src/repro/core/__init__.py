@@ -23,6 +23,7 @@ from repro.core.norms import (
     sigma_max_power,
     sigma_max_upper,
     sigma_min_lower,
+    sigma_min_lower_qr,
 )
 from repro.core.qdwh import PolarInfo, form_h, qdwh_pd, qdwh_pd_static
 from repro.core.registry import (
@@ -48,6 +49,13 @@ from repro.core.svd import (
     polar_svd,
     svd_residual,
 )
-from repro.core.zolo import polar_canonical, zolo_pd, zolo_pd_static
+from repro.core.zolo import (
+    DEFAULT_OPS,
+    ZoloOps,
+    polar_canonical,
+    zolo_pd,
+    zolo_pd_static,
+)
+from repro.core.zolo_pallas import pallas_zolo_ops, zolo_pd_pallas
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -9,6 +9,10 @@ or cheaply estimated (§3.2, Table 3).  On TPU we estimate in-graph:
 * ``sigma_min_lower``    — inverse power iteration on the (ridged) Gram
                            matrix; returns a deliberately deflated estimate
                            (x0.5) so the Zolotarev interval stays valid.
+* ``sigma_min_lower_qr`` — one QR + inverse iteration on R; never squares
+                           the condition number, so it resolves sigma_min
+                           down to ~eps * sigma_max (what
+                           ``condition_estimate`` uses).
 """
 
 from __future__ import annotations
@@ -53,12 +57,19 @@ def sigma_min_lower(x, iters: int = 8, safety: float = 0.5):
     Inverse power iteration on G = X^T X + delta I via one Cholesky,
     delta = n * eps keeps the factorization well-posed even for singular X.
     Never returns below sqrt(delta) * safety (the resolution floor).
+
+    The Gram product accumulates in f32-or-better and the iteration runs
+    in that dtype (its eps sets the ridge): a bf16/f16 input would
+    otherwise push the resolution floor to sqrt(n * eps_bf16) ~ 0.5 —
+    an *over*-estimate of sigma_min, invalidating the Zolotarev interval
+    it feeds.  Returns the promoted dtype (f32 for bf16/f16 inputs).
     """
     n = x.shape[-1]
-    dtype = x.dtype
+    dtype = jnp.promote_types(x.dtype, jnp.float32)
     eps = jnp.finfo(dtype).eps
     delta = n * eps
-    g = jnp.einsum("...mk,...mn->...kn", x, x)
+    g = jnp.einsum("...mk,...mn->...kn", x, x,
+                   preferred_element_type=dtype)
     g = g + delta * jnp.eye(n, dtype=dtype)
     l = jnp.linalg.cholesky(g)
 
@@ -88,9 +99,14 @@ def sigma_min_lower_qr(x, iters: int = 12, safety: float = 0.5):
     Unlike the Gram route this never squares the condition number, so it
     resolves sigma_min down to ~eps * sigma_max (the standard trick in
     production QDWH implementations: condition-estimate the R factor).
+
+    bf16/f16 inputs promote to f32 up front (QR has no low-precision
+    kernel, and the estimate would be meaningless at eps_bf16 anyway);
+    like :func:`sigma_min_lower`, the result is the promoted dtype.
     """
     n = x.shape[-1]
-    dtype = x.dtype
+    dtype = jnp.promote_types(x.dtype, jnp.float32)
+    x = x.astype(dtype)
     r = jnp.linalg.qr(x, mode="r")
 
     def solve(v):
@@ -115,9 +131,17 @@ def sigma_min_lower_qr(x, iters: int = 12, safety: float = 0.5):
     return jnp.maximum(safety * sig, 4 * eps)
 
 
-def condition_estimate(a, iters: int = 8):
-    """Crude kappa_2 estimate (sigma_max upper / sigma_min lower)."""
+def condition_estimate(a, iters: int = 12):
+    """kappa_2 estimate: (upper bound on sigma_max) / (lower bound on
+    sigma_min), i.e. an over-estimate — safe to feed the Zolotarev
+    interval [1/kappa, 1].
+
+    Routes sigma_min through the QR estimator: the Gram route squares
+    the condition number and floors out near sqrt(n * eps), silently
+    capping the estimate around 1e7 in f64 — useless at the paper's
+    ill-conditioned regimes (kappa up to 1e16, Tables 5/10).
+    """
     amax = sigma_max_upper(a)
-    x0 = a / amax
-    smin = sigma_min_lower(x0, iters=iters)
+    x0 = a / amax.astype(a.dtype)
+    smin = sigma_min_lower_qr(x0, iters=iters)
     return 1.0 / smin

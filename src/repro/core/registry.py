@@ -4,7 +4,12 @@
 one code path from ``plan(...)`` (and the thin back-compat wrappers
 ``polar_decompose`` / ``polar_svd``) down to a backend, and a new solver
 (a Pallas kernel, a distributed variant, a debugging oracle) plugs in
-with a decorator instead of another ``elif``:
+with a decorator instead of another ``elif``.  ``zolo_pallas``
+(:mod:`repro.core.zolo_pallas`) is the template for kernel-backed
+backends: inject a :class:`repro.core.zolo.ZoloOps` bundle into the
+shared driver, register the result with a ``flops_fn`` that reflects
+where the kernels actually run fast (compiled on TPU; Pallas interpret
+mode — and a cost penalty — elsewhere):
 
     @register_polar("my_solver")
     def my_solver(a, **kw):
@@ -19,13 +24,17 @@ through r-process-group execution (paper Algorithm 3).
 
 Plan-time contract (consumed by :mod:`repro.solver`):
 
-* ``flops_fn(m, n, *, r, kappa, grouped=False) -> float`` — total flop
-  estimate for solving an (m, n) problem of condition ``kappa`` at
-  Zolotarev order ``r``; ``grouped=True`` means Algorithm-3 execution
-  (e.g. per-group Gram recomputation instead of the shared product).
-  ``SvdConfig(method="auto")`` scores every capability-matching backend
-  with this hook (grouped mode divides by r — the per-group critical
-  path) and picks the cheapest; specs without a ``flops_fn`` rank last.
+* ``flops_fn(m, n, *, r, kappa, grouped=False, dtype=None) -> float`` —
+  total flop estimate for solving an (m, n) problem of condition
+  ``kappa`` at Zolotarev order ``r``; ``grouped=True`` means
+  Algorithm-3 execution (e.g. per-group Gram recomputation instead of
+  the shared product); ``dtype`` is the plan's input dtype, so a
+  backend whose cost (or fitness) depends on precision can penalize
+  itself — e.g. ``zolo_pallas`` accumulates in f32 and prices itself
+  out of f64 auto-selection.  ``SvdConfig(method="auto")`` scores every
+  capability-matching backend with this hook (grouped mode divides by r
+  — the per-group critical path) and picks the cheapest; specs without
+  a ``flops_fn`` rank last.
 * ``plan_fn(res) -> dict`` — called once at plan time with the resolved
   :class:`repro.solver.PlanResolution` (m, n, mode, r, l0, kappa,
   max_iters, qr_mode, qr_iters, nb); returns the *static* backend kwargs

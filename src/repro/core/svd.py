@@ -24,6 +24,7 @@ from repro.core import newton as _newton
 from repro.core import norms as _norms
 from repro.core import qdwh as _qdwh
 from repro.core import zolo as _zolo
+from repro.core import zolo_pallas as _zolo_pallas
 from repro.core.registry import register_eig, register_polar
 
 
@@ -60,7 +61,7 @@ def _grouped_zolo_adapter(a, *, mesh, l0=None, r=None, want_h: bool = False,
 # accounting (lazy import: core must not depend on repro.dist at import).
 
 
-def _zolo_flops(m, n, *, r, kappa, grouped=False):
+def _zolo_flops(m, n, *, r, kappa, grouped=False, dtype=None):
     from repro.dist.grouped import grouped_iteration_flops
 
     iters = _coeffs.zolo_iter_count(float(kappa), int(r))
@@ -70,14 +71,38 @@ def _zolo_flops(m, n, *, r, kappa, grouped=False):
                                    gram_shared=not grouped)
 
 
-def _qdwh_flops(m, n, *, r, kappa, grouped=False):
+def _zolo_pallas_flops(m, n, *, r, kappa, grouped=False, dtype=None):
+    """Cost model for the Pallas-kernel Zolo backend.
+
+    Same arithmetic as ``zolo_static``, but the fused kernels cut HBM
+    traffic (the +cI and the r-term combine stop being separate full-
+    array passes), modeled as a small discount so ``method="auto"``
+    prefers the kernel path on TPU at equal flops.  Two penalties keep
+    auto-selection honest: off-TPU the kernels run in Pallas interpret
+    mode (the kernel body executes in Python), and the kernels
+    accumulate in f32, so an f64 plan would silently lose the precision
+    the caller asked for — in both cases the backend stays scoreable
+    (and explicitly selectable) but never wins ``method="auto"``.
+    """
+    base = _zolo_flops(m, n, r=r, kappa=kappa, grouped=grouped)
+    penalty = 1.0
+    if jax.default_backend() != "tpu":
+        penalty *= 1e3  # interpret mode
+    if dtype is not None and jnp.dtype(dtype).itemsize > 4:
+        penalty *= 1e3  # f32-accumulating kernels on an f64 plan
+    if penalty == 1.0:
+        return base * 0.95  # fused-kernel HBM saving on TPU
+    return base * penalty
+
+
+def _qdwh_flops(m, n, *, r, kappa, grouped=False, dtype=None):
     iters = _coeffs.qdwh_iter_count(float(kappa))
     # per iteration: Gram product + n^3/3 Cholesky + two solves (the QR
     # iterations cost more, but only the leading one or two use QR)
     return iters * (2.0 * m * n * n + n ** 3 / 3.0 + 2.0 * m * n * n)
 
 
-def _newton_flops(m, n, *, r, kappa, grouped=False):
+def _newton_flops(m, n, *, r, kappa, grouped=False, dtype=None):
     if m != n:
         return float("inf")  # scaled Newton needs a square nonsingular A
     # explicit pivoted-LU inverse (~2 n^3) per iteration, ~9 iterations
@@ -152,6 +177,12 @@ register_polar("zolo_grouped", supports_grouped=True, requires_mesh=True,
                flops_fn=_zolo_flops, plan_fn=_zolo_static_planfn,
                description="paper Alg. 3: one Zolotarev term per group")(
     _grouped_zolo_adapter)
+register_polar("zolo_pallas",
+               flops_fn=_zolo_pallas_flops, plan_fn=_zolo_static_planfn,
+               description="Pallas kernel-backed trace-time Zolo-PD "
+                           "(fused Gram + r-term combine; compiled on "
+                           "TPU, interpret mode elsewhere)")(
+    _zolo_pallas.zolo_pd_pallas)
 register_polar("qdwh", dynamic=True,
                flops_fn=_qdwh_flops, plan_fn=_qdwh_dynamic_planfn,
                description="dynamic QDWH-PD baseline")(_qdwh.qdwh_pd)

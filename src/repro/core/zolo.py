@@ -26,7 +26,7 @@ Drivers:
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,14 +37,46 @@ from repro.core.qdwh import PolarInfo, form_h
 from repro.core.structured_qr import structured_qr_q1q2 as _structured_qr_q1q2
 
 
-def _gram(x):
-    """G = X^T X with f32-or-better accumulation."""
-    return jnp.einsum("...mk,...mn->...kn", x, x,
-                      preferred_element_type=jnp.promote_types(x.dtype,
-                                                               jnp.float32))
+def _gram(x, c=0.0):
+    """G = X^T X (+ c I) with f32-or-better accumulation."""
+    g = jnp.einsum("...mk,...mn->...kn", x, x,
+                   preferred_element_type=jnp.promote_types(x.dtype,
+                                                            jnp.float32))
+    if isinstance(c, (int, float)) and c == 0.0:
+        return g
+    n = x.shape[-1]
+    return g + jnp.asarray(c, g.dtype) * jnp.eye(n, dtype=g.dtype)
 
 
-def _chol_terms(x, c_odd, gram=None):
+def _polar_update(x, t, a, mhat):
+    """X2 = mhat * (X + sum_j a_j T_j) over stacked terms t: (r, ..., m, n)."""
+    s = jnp.einsum("j,j...mn->...mn", a.astype(x.dtype), t)
+    return mhat.astype(x.dtype) * (x + s)
+
+
+class ZoloOps(NamedTuple):
+    """Injectable compute ops for the Zolotarev iteration hot spots.
+
+    The iteration bodies below route their two hot loops through this
+    bundle, so a backend can swap the default jnp/einsum path for fused
+    kernels (``repro.core.zolo_pallas`` builds one on the Pallas kernels
+    in :mod:`repro.kernels`) without touching the driver logic.
+
+    * ``gram(x, c=0.0)``          -> X^T X + c I, f32-or-better
+      accumulation (callers cast the result to the working dtype).
+    * ``polar_update(x, t, a, mhat)`` -> mhat * (X + sum_j a[j] T[j])
+      with ``t`` the stacked (r, m, n) terms — the iteration combine
+      (paper's DGSUM2D role).
+    """
+
+    gram: Callable = _gram
+    polar_update: Callable = _polar_update
+
+
+DEFAULT_OPS = ZoloOps()
+
+
+def _chol_terms(x, c_odd, gram=None, *, ops: ZoloOps = DEFAULT_OPS):
     """T_j = X (X^T X + c_{2j-1} I)^{-1} for all j, batched over r.
 
     Returns W with shape (r, ..., n, m) holding Z_j^{-1} X^T (transposed
@@ -52,7 +84,7 @@ def _chol_terms(x, c_odd, gram=None):
     """
     n = x.shape[-1]
     dtype = x.dtype
-    g = _gram(x).astype(dtype) if gram is None else gram
+    g = ops.gram(x).astype(dtype) if gram is None else gram
     eye = jnp.eye(n, dtype=dtype)
     z = g[None] + c_odd[:, None, None].astype(dtype) * eye  # (r, n, n)
     l = jnp.linalg.cholesky(z)
@@ -63,24 +95,25 @@ def _chol_terms(x, c_odd, gram=None):
     return w  # (r, n, m)
 
 
-def term_sum_chol(x, c_odd, a, gram=None):
+def term_sum_chol(x, c_odd, a, gram=None, *, ops: ZoloOps = DEFAULT_OPS):
     """sum_j a_j X (X^T X + c_{2j-1} I)^{-1} over the given (possibly
     partial) odd-coefficient slice — the Cholesky-variant Zolotarev term.
 
     Shared by the single-address-space batched drivers below and by the
     per-group bodies of :mod:`repro.dist.grouped` (where each process
     group holds a length-1 slice of ``c_odd`` / ``a``)."""
-    w = _chol_terms(x, c_odd, gram=gram)
+    w = _chol_terms(x, c_odd, gram=gram, ops=ops)
     return jnp.einsum("j,jnm->mn", a.astype(x.dtype), w)
 
 
-def _zolo_iter_chol(x, c, a, mhat):
+def _zolo_iter_chol(x, c, a, mhat, *, ops: ZoloOps = DEFAULT_OPS):
     """One Cholesky-variant Zolotarev iteration (Alg. 1 step 4d)."""
-    t = term_sum_chol(x, c[0::2], a)
-    return mhat.astype(x.dtype) * (x + t)
+    w = _chol_terms(x, c[0::2], ops=ops)  # (r, ..., n, m)
+    t = jnp.swapaxes(w, -1, -2)           # stacked terms (r, ..., m, n)
+    return ops.polar_update(x, t, a, mhat)
 
 
-def term_sum_cholqr2(x, c_odd, a):
+def term_sum_cholqr2(x, c_odd, a, *, ops: ZoloOps = DEFAULT_OPS):
     """sum_j (a_j / sqrt(c_j)) Q1_j Q2_j^T via shifted CholeskyQR2
     (eq. 12 analogue) over the given odd-coefficient slice.
 
@@ -95,7 +128,7 @@ def term_sum_cholqr2(x, c_odd, a):
     sqrt_c = jnp.sqrt(c_odd).astype(dtype)
     eye = jnp.eye(n, dtype=dtype)
 
-    g = _gram(x).astype(dtype)
+    g = ops.gram(x).astype(dtype)
     z = g[None] + c_odd[:, None, None].astype(dtype) * eye
     l1 = jnp.linalg.cholesky(z)  # R1 = L1^T
     xb = jnp.broadcast_to(x, (r,) + x.shape)
@@ -121,10 +154,14 @@ def term_sum_cholqr2(x, c_odd, a):
                       q1, q2)
 
 
-def _zolo_iter_cholqr2(x, c, a, mhat):
-    """One shifted-CholeskyQR2 Zolotarev iteration (stable first iter)."""
-    t = term_sum_cholqr2(x, c[0::2], a)
-    return mhat.astype(x.dtype) * (x + t)
+def _zolo_iter_cholqr2(x, c, a, mhat, *, ops: ZoloOps = DEFAULT_OPS):
+    """One shifted-CholeskyQR2 Zolotarev iteration (stable first iter).
+
+    ``term_sum_cholqr2`` folds the a_j weights into its sum, so the
+    combine sees one pre-summed term with unit weight."""
+    t = term_sum_cholqr2(x, c[0::2], a, ops=ops)
+    one = jnp.ones((1,), jnp.promote_types(x.dtype, jnp.float32))
+    return ops.polar_update(x, t[None], one, mhat)
 
 
 def term_sum_householder(x, c_odd, a, block: int = 32):
@@ -142,10 +179,12 @@ def term_sum_householder(x, c_odd, a, block: int = 32):
     return sum(terms)
 
 
-def _zolo_iter_householder(x, c, a, mhat, block: int = 32):
+def _zolo_iter_householder(x, c, a, mhat, block: int = 32, *,
+                           ops: ZoloOps = DEFAULT_OPS):
     """Paper-faithful first iteration: structured Householder QR terms."""
     t = term_sum_householder(x, c[0::2], a, block=block)
-    return mhat.astype(x.dtype) * (x + t)
+    one = jnp.ones((1,), jnp.promote_types(x.dtype, jnp.float32))
+    return ops.polar_update(x, t[None], one, mhat)
 
 
 _ITER_FNS = {
@@ -155,11 +194,20 @@ _ITER_FNS = {
 }
 
 
+def _validate_iter_mode(name: str, value: str, extra=()) -> None:
+    """ValueError (not a bare KeyError from ``_ITER_FNS``) for an unknown
+    iteration mode, listing the valid choices — matching the ``qr_mode``
+    validation in :mod:`repro.dist.grouped`."""
+    valid = sorted(_ITER_FNS) + list(extra)
+    if value not in valid:
+        raise ValueError(f"unknown {name}: {value!r} (one of {valid})")
+
+
 def zolo_pd_static(a, *, l0: Optional[float] = None,
                    r: Optional[int] = None, max_iters: int = 6,
                    want_h: bool = False, qr_mode: str = "cholqr2",
                    qr_iters: int = 1, hermitian_source=None,
-                   schedule=None):
+                   schedule=None, ops: Optional[ZoloOps] = None):
     """Unrolled Zolo-PD with a trace-time coefficient schedule.
 
     ``a`` must be pre-scaled (sigma_max <= 1) with singular values in
@@ -168,8 +216,13 @@ def zolo_pd_static(a, *, l0: Optional[float] = None,
     Cholesky variant.  A precomputed ``schedule`` (sequence of
     :class:`repro.core.coeffs.ZoloIteration`, e.g. bound once by an
     ``SvdPlan``) takes precedence over ``l0``/``r``/``max_iters``.
+    ``ops`` swaps the iteration's compute ops (Gram product, r-term
+    combine) for an alternative :class:`ZoloOps` bundle — the hook the
+    kernel-backed ``zolo_pallas`` backend plugs into.
     Returns (Q, H or None, PolarInfo).
     """
+    _validate_iter_mode("qr_mode", qr_mode)
+    ops = DEFAULT_OPS if ops is None else ops
     if schedule is not None:
         sched = list(schedule)
     elif l0 is not None:
@@ -186,7 +239,7 @@ def zolo_pd_static(a, *, l0: Optional[float] = None,
         av = jnp.asarray(it.a, coeff_dtype)
         mh = jnp.asarray(it.mhat, coeff_dtype)
         fn = _ITER_FNS[qr_mode] if i < qr_iters else _zolo_iter_chol
-        x = fn(x, c, av, mh)
+        x = fn(x, c, av, mh, ops=ops)
     src = a if hermitian_source is None else hermitian_source
     info = PolarInfo(iterations=jnp.int32(len(sched)),
                      residual=jnp.asarray(0.0, a.dtype),
@@ -217,6 +270,7 @@ def zolo_pd(a, r: int = 3, *, alpha=None, l=None, max_iters: int = 8,
     branch.  All remaining iterations use the shared-Gram Cholesky form
     (after one Zolotarev map the interval is always in Cholesky range).
     """
+    _validate_iter_mode("first_mode", first_mode, extra=("auto",))
     dtype = a.dtype
     eps = eps or float(jnp.finfo(dtype).eps)
     # alpha must be a guaranteed upper bound (paper: alpha assumed known/

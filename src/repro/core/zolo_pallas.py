@@ -1,0 +1,92 @@
+"""Kernel-backed Zolo-PD: the ``zolo_pallas`` registry backend.
+
+Builds the static (trace-time schedule) Zolotarev driver of
+:mod:`repro.core.zolo` on the fused Pallas kernels in
+:mod:`repro.kernels` by injecting a :class:`repro.core.zolo.ZoloOps`
+bundle whose two hot loops are hand-tiled TPU kernels:
+
+* ``repro.kernels.ops.gram``         — fused shifted Gram
+  ``G = X^T X + c I`` (MXU tiles, f32 accumulation; Alg. 1 step 4d /
+  Alg. 3 step 4c hot spot).
+* ``repro.kernels.ops.polar_update`` — fused r-term combine
+  ``X2 = mhat (X + sum_j a_j T_j)`` (the DGSUM2D role; one HBM pass
+  over the r+1 arrays instead of chained read-modify-writes).
+
+On TPU the kernels compile; on any other backend they run in Pallas
+interpret mode (the kernel body executes in Python) so the backend stays
+testable on CPU — numerically correct but slow, which the registered
+cost model in :mod:`repro.core.svd` reflects, keeping ``method="auto"``
+from picking it off-TPU.
+
+Tile sizes thread from ``SvdConfig.extra``::
+
+    SvdConfig(method="zolo_pallas", l0=1e-3,
+              extra=(("bn", 128), ("bk", 256)))
+
+This module is the pattern every future Pallas hot spot follows: wrap
+the kernel in a ``ZoloOps`` field (or a new bundle slot, e.g. the
+CholeskyQR2 second-pass Gram or the grouped combine), inject it into the
+shared driver, register the result as its own backend.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import zolo as _zolo
+from repro.kernels import ops as _kops
+
+
+def pallas_zolo_ops(*, bn: int = 256, bk: int = 512, bm: int = 256,
+                    use_pallas: bool = True) -> _zolo.ZoloOps:
+    """A :class:`repro.core.zolo.ZoloOps` bundle backed by the Pallas
+    kernels.
+
+    ``bn``/``bk`` tile the Gram kernel ((bk, bn) A-tiles, (bn, bn)
+    output accumulator), ``bm``/``bn`` tile the combine; the wrappers in
+    :mod:`repro.kernels.ops` shrink tiles to fit and pad non-multiple
+    shapes.  ``use_pallas=False`` routes both ops to the jnp oracles —
+    the ablation path the benchmarks compare against.
+
+    The kernels are 2-D; batched inputs (reached via ``vmap`` in
+    ``SvdPlan.svd_batched``) map over their leading axes outside this
+    bundle, so each call still sees one (m, n) problem.  f64 inputs are
+    accepted but accumulate in f32 (the kernels' MXU dtype policy);
+    callers needing full f64 stay on the default jnp ops.
+    """
+
+    def gram(x, c=0.0):
+        if x.ndim != 2:
+            return _zolo._gram(x, c)  # kernels are 2-D; jnp path batches
+        return _kops.gram(x, c, bn=bn, bk=bk, use_pallas=use_pallas)
+
+    def polar_update(x, t, a, mhat):
+        if x.ndim != 2:
+            return _zolo._polar_update(x, t, a, mhat)
+        return _kops.polar_update(x, t, a, mhat, bm=bm, bn=bn,
+                                  use_pallas=use_pallas)
+
+    return _zolo.ZoloOps(gram=gram, polar_update=polar_update)
+
+
+def zolo_pd_pallas(a, *, l0: Optional[float] = None,
+                   r: Optional[int] = None, max_iters: int = 6,
+                   want_h: bool = False, qr_mode: str = "cholqr2",
+                   qr_iters: int = 1, hermitian_source=None,
+                   schedule=None, bn: int = 256, bk: int = 512,
+                   bm: int = 256, use_pallas: bool = True):
+    """Unrolled Zolo-PD (same contract as
+    :func:`repro.core.zolo.zolo_pd_static`) with the iteration's Gram
+    product and r-term combine running on the Pallas kernels.
+
+    ``a`` must be pre-scaled (sigma_max <= 1) with singular values in
+    [l0, 1]; a plan-precomputed ``schedule`` takes precedence over
+    ``l0``/``r``/``max_iters``.  ``bn``/``bk``/``bm`` select kernel tile
+    sizes (threaded from ``SvdConfig.extra`` by the planner).  Returns
+    (Q, H or None, PolarInfo).
+    """
+    ops = pallas_zolo_ops(bn=bn, bk=bk, bm=bm, use_pallas=use_pallas)
+    return _zolo.zolo_pd_static(
+        a, l0=l0, r=r, max_iters=max_iters, want_h=want_h,
+        qr_mode=qr_mode, qr_iters=qr_iters,
+        hermitian_source=hermitian_source, schedule=schedule, ops=ops)

@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+One module per kernel (``gram``, ``polar_update``, ``matmul``,
+``flash_attention``) + jnp oracles in ``ref.py`` + the jit'd public
+wrappers in ``ops.py`` (padding, tile selection, interpret-mode fallback
+off-TPU).  The solver reaches these through the registered
+``zolo_pallas`` backend (:mod:`repro.core.zolo_pallas`), which injects
+``ops.gram`` / ``ops.polar_update`` into the shared Zolotarev driver via
+its :class:`repro.core.zolo.ZoloOps` bundle.
+"""

@@ -36,9 +36,18 @@ def _pad_to(x, mult_rows, mult_cols):
 
 
 def _pick_tile(dim: int, target: int, align: int = 128) -> int:
-    """Largest tile <= target that divides dim after align-padding."""
+    """Largest align-multiple tile <= target that divides dim after
+    align-padding.
+
+    ``target`` is rounded down to an ``align`` multiple first: tile dims
+    must keep MXU alignment, and a non-multiple target (now reachable via
+    ``SvdConfig.extra`` tile knobs) would otherwise never divide the
+    padded dim — the decrement loop walked past zero and never
+    terminated."""
+    if target < align:
+        raise ValueError(f"tile target {target} < MXU alignment {align}")
     padded = dim + ((-dim) % align)
-    t = min(target, padded)
+    t = min(target - target % align, padded)
     while padded % t:
         t -= align
     return max(t, align)

@@ -106,7 +106,7 @@ def _capability_ok(spec, mode: str) -> bool:
 
 
 def _select_method(mode: str, m: int, n: int, r_hint: int,
-                   kappa: float):
+                   kappa: float, dtype=None):
     """method="auto": capability filter, then cheapest by ``flops_fn``."""
     cands = [_registry.get_polar(name) for name in _registry.list_polar()]
     cands = [s for s in cands if _capability_ok(s, mode)]
@@ -118,7 +118,8 @@ def _select_method(mode: str, m: int, n: int, r_hint: int,
         if spec.flops_fn is None:
             return (1, 0.0, spec.name)  # unranked: after every costed spec
         flops = float(spec.flops_fn(m, n, r=r_hint, kappa=kappa,
-                                    grouped=(mode == "grouped")))
+                                    grouped=(mode == "grouped"),
+                                    dtype=dtype))
         if mode == "grouped":
             flops /= max(r_hint, 1)  # per-group critical path
         return (0, flops, spec.name)
@@ -211,7 +212,8 @@ def _resolve(config: SvdConfig, shape, dtype, mesh):
         spec = explicit
     else:
         spec = _select_method(mode, m, n,
-                              r or _coeffs.choose_r(kappa_eff), kappa_eff)
+                              r or _coeffs.choose_r(kappa_eff), kappa_eff,
+                              dtype=dtype)
     _validate_capability(spec, mode, config)
 
     res = PlanResolution(method=spec.name, mode=mode,
@@ -314,7 +316,8 @@ class SvdPlan:
         r = res.r if res.r is not None else _coeffs.choose_r(kappa)
         grouped = self.mode == "grouped"
         flops = float(self._spec.flops_fn(res.m, res.n, r=r, kappa=kappa,
-                                          grouped=grouped))
+                                          grouped=grouped,
+                                          dtype=res.dtype))
         return flops / max(r, 1) if grouped else flops
 
     def __repr__(self):

@@ -47,6 +47,93 @@ def test_polar_update_kernel(r, dtype, rng):
                                atol=tol * r, rtol=tol * r)
 
 
+# Non-128-multiple shapes: the _pad_to/_pick_tile + slice-back round trip
+# must match the oracle exactly where the data lives (padding rows/cols
+# are sliced off).  (130, 70) pads both dims below one tile; (257, 129)
+# pads both dims one past a tile boundary.
+
+
+@pytest.mark.parametrize("m,n", [(130, 70), (257, 129)])
+def test_gram_kernel_padding_roundtrip(m, n, rng):
+    a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    got = ops.gram(a, 0.31)
+    want = ref.gram_ref(a, 0.31)
+    assert got.shape == (n, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(130, 70, 257), (257, 129, 70)])
+def test_matmul_kernel_padding_roundtrip(m, k, n, rng):
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    got = ops.matmul(a, b, alpha=0.7)
+    want = ref.matmul_ref(a, b, alpha=0.7)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("m,n", [(130, 70), (257, 129)])
+def test_polar_update_kernel_padding_roundtrip(m, n, rng):
+    r = 3
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((r, m, n)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal(r), jnp.float32)
+    got = ops.polar_update(x, t, a, 0.93)
+    want = ref.polar_update_ref(x, t, a, 0.93)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_pick_tile_non_multiple_target_terminates():
+    """A tile target that is not a 128 multiple must round down to an
+    aligned divisor of the padded dim (the old decrement loop walked
+    past zero and never terminated)."""
+    from repro.kernels.ops import _pick_tile
+    assert _pick_tile(130, 200) == 128
+    assert _pick_tile(512, 300) == 256
+    assert _pick_tile(70, 512) == 128
+    t = _pick_tile(257, 300)
+    assert t % 128 == 0 and (257 + (-257) % 128) % t == 0
+    with pytest.raises(ValueError, match="alignment"):
+        _pick_tile(256, 64)
+
+
+def test_zolo_pallas_backend_matches_zolo(rng):
+    """The registered kernel-backed polar backend vs the dynamic XLA
+    path on a scaled random matrix (interpret mode on CPU)."""
+    import repro.core as C
+    kappa = 1e3
+    from conftest import make_matrix
+    a = make_matrix(96, 64, kappa, dtype=jnp.float32, seed=5)
+    q_k, h_k, _ = C.polar_decompose(a, method="zolo_pallas",
+                                    l0=0.9 / kappa, r=2, want_h=True)
+    q_x, h_x, _ = C.polar_decompose(a, method="zolo", alpha=1.0,
+                                    l=0.9 / kappa, r=2)
+    np.testing.assert_allclose(np.asarray(q_k), np.asarray(q_x),
+                               atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_x),
+                               atol=5e-5, rtol=5e-5)
+    assert float(C.orthogonality(q_k)) < 5e-6
+
+
+def test_zolo_pallas_ops_bundle_matches_default(rng):
+    """pallas_zolo_ops vs DEFAULT_OPS on one full static driver run,
+    including a non-128-multiple shape (padding inside the iteration)."""
+    import repro.core as C
+    kappa = 1e2
+    from conftest import make_matrix
+    a = make_matrix(130, 70, kappa, dtype=jnp.float32, seed=6)
+    q_d, _, _ = C.zolo_pd_static(a, l0=0.9 / kappa, r=2)
+    q_p, _, _ = C.zolo_pd_static(a, l0=0.9 / kappa, r=2,
+                                 ops=C.pallas_zolo_ops(bn=128, bk=128,
+                                                       bm=128))
+    np.testing.assert_allclose(np.asarray(q_p), np.asarray(q_d),
+                               atol=5e-5, rtol=5e-5)
+
+
 def test_gram_kernel_in_zolo_context(rng):
     """Kernel output is good enough to drive a full Zolo iteration."""
     import repro.core as C

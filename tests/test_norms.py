@@ -1,0 +1,68 @@
+"""Spectral-bound estimators: accumulation dtype and conditioning range.
+
+Regression coverage for two estimator bugs:
+
+* ``sigma_min_lower`` computed its Gram product without f32-or-better
+  accumulation, so a bf16 input's ridge delta = n * eps_bf16 pushed the
+  resolution floor to ~sqrt(n * 0.008) — an *over*-estimate of
+  sigma_min, which invalidates the Zolotarev interval it feeds.
+* ``condition_estimate`` went through the Gram-route ``sigma_min_lower``,
+  which squares the condition number and floors out near sqrt(n * eps),
+  silently capping kappa estimates around 1e7 in f64.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import norms
+
+from conftest import make_matrix
+
+
+def test_sigma_min_lower_bf16_accumulates_f32():
+    """bf16 input: the estimate must stay a *lower* bound of sigma_min
+    (the old bf16 ridge made it an over-estimate ~0.3 for sigma_min 0.1)
+    and must not collapse to the bf16 resolution floor."""
+    a = make_matrix(64, 48, 10.0, dtype=jnp.bfloat16)  # sigma_min = 0.1
+    est = norms.sigma_min_lower(a)
+    assert est.dtype == jnp.float32  # promoted accumulation dtype
+    assert float(est) <= 0.105  # lower bound (0.5 safety; bf16 noise slack)
+    assert float(est) >= 0.02   # resolves well above the old ~0.3 floor
+
+
+def test_sigma_min_lower_f64_path_unchanged():
+    """f64/f32 inputs already promote to themselves: same estimator."""
+    a = make_matrix(96, 64, 1e3)  # f64, sigma_min = 1e-3
+    est = float(norms.sigma_min_lower(a))
+    assert 2.5e-4 <= est <= 1e-3  # ~0.5 * sigma_min, never above
+
+
+@pytest.mark.parametrize("kappa", [1e4, 1e10, 1e13])
+def test_condition_estimate_known_kappa(kappa):
+    """QR-routed kappa estimate: an over-estimate of the true kappa_2,
+    within a small factor — including regimes far beyond the Gram
+    route's ~1e7 squaring floor."""
+    a = make_matrix(96, 64, kappa, seed=3)
+    est = float(norms.condition_estimate(a))
+    assert est >= 0.99 * kappa          # over-estimate (fp slack)
+    assert est <= 20.0 * kappa          # ...but a usable one
+
+
+def test_condition_estimate_bf16_promotes():
+    """The QR route has no bf16 kernel; the estimator must promote to
+    f32 up front instead of raising, and still bound kappa from above."""
+    kappa = 50.0
+    a = make_matrix(64, 48, kappa, dtype=jnp.bfloat16, seed=6)
+    est = float(norms.condition_estimate(a))
+    assert est >= 0.9 * kappa   # bf16 rounding slack on the input itself
+    assert est <= 20.0 * kappa
+
+
+def test_condition_estimate_beats_gram_floor():
+    """The old Gram route capped near 1/ (0.5 * sqrt(n * eps)) ~ 2e7 in
+    f64; the QR route must keep tracking kappa past that."""
+    a = make_matrix(96, 64, 1e12, seed=4)
+    est = float(norms.condition_estimate(a))
+    assert est > 1e11

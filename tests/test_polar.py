@@ -94,6 +94,16 @@ def test_first_mode_variants_agree():
     assert float(jnp.abs(qs["cholqr2"] - qs["householder"]).max()) < 1e-9
 
 
+def test_unknown_iteration_modes_raise_value_error():
+    """An unknown first_mode/qr_mode must fail up front with the valid
+    choices, not leak a bare KeyError from the dispatch table."""
+    a = make_matrix(32, 16, 10.0, seed=5)
+    with pytest.raises(ValueError, match="first_mode.*'qr'"):
+        C.zolo_pd(a, first_mode="qr")
+    with pytest.raises(ValueError, match="qr_mode.*chol"):
+        C.zolo_pd_static(a, l0=0.09, qr_mode="house")
+
+
 def test_newton_square():
     a = make_matrix(90, 90, 1e6, seed=4)
     q, h, info = C.scaled_newton_pd(a)

@@ -255,6 +255,71 @@ def test_orthogonalize_reuses_plan_across_steps():
                                atol=2e-3)
 
 
+def test_plan_zolo_pallas_matches_zolo_static():
+    """The kernel-backed backend through the full plan path: cached plan
+    identity, schedule binding, zero retrace, and parity with the XLA
+    (zolo_static) backend at f32-accumulation tolerance."""
+    kappa = 1e3
+    a = make_matrix(96, 64, kappa, dtype=jnp.float32, seed=12)
+    cfg = S.SvdConfig(method="zolo_pallas", l0=0.9 / kappa, r=2)
+    p = S.plan(cfg, a.shape, a.dtype)
+    assert p.method == "zolo_pallas" and p.mode == "static"
+    assert p.schedule is not None and len(p.schedule) >= 1
+    assert p is S.plan(cfg, a.shape, a.dtype)  # cached plan identity
+    q, h, info = p.polar(a)
+    t0 = S.trace_count()
+    q2, _, _ = p.polar(a)
+    assert S.trace_count() == t0, "second plan.polar call retraced"
+
+    ref = S.plan(S.SvdConfig(method="zolo_static", l0=0.9 / kappa, r=2),
+                 a.shape, a.dtype)
+    q_r, h_r, _ = ref.polar(a)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q_r),
+                               atol=5e-5, rtol=5e-5)
+    u, s, vh = p.svd(a)
+    s0 = np.linalg.svd(np.asarray(a, np.float64), compute_uv=False)
+    np.testing.assert_allclose(np.asarray(s), s0, atol=1e-4)
+    assert float(C.orthogonality(u)) < 5e-6
+
+
+def test_plan_zolo_pallas_tile_knobs_via_extra():
+    """Tile sizes thread from SvdConfig.extra to the kernel wrappers."""
+    kappa = 1e2
+    a = make_matrix(64, 48, kappa, dtype=jnp.float32, seed=13)
+    p = S.plan(S.SvdConfig(method="zolo_pallas", l0=0.9 / kappa, r=2,
+                           extra=(("bk", 128), ("bn", 128))),
+               a.shape, a.dtype)
+    q, _, _ = p.polar(a, want_h=False)
+    assert float(C.orthogonality(q)) < 5e-6
+    with pytest.raises(ValueError, match="alignment"):
+        p_bad = S.plan(S.SvdConfig(method="zolo_pallas", l0=0.9 / kappa,
+                                   r=2, extra=(("bn", 64),)),
+                       a.shape, a.dtype)
+        p_bad.polar(a, want_h=False)
+
+
+def test_auto_scores_zolo_pallas_without_picking_baselines():
+    """method='auto' must score the kernel backend via its registered
+    flops_fn — on CPU the interpret-mode penalty keeps it from winning,
+    and the pick is never an oracle/baseline."""
+    pallas_spec = registry.get_polar("zolo_pallas")
+    assert pallas_spec.flops_fn is not None
+    static_spec = registry.get_polar("zolo_static")
+    # off-TPU the kernel backend scores strictly worse than the XLA path
+    kw = dict(r=2, kappa=1e6)
+    assert pallas_spec.flops_fn(128, 96, **kw) > \
+        static_spec.flops_fn(128, 96, **kw)
+    p = S.plan(S.SvdConfig(kappa=1e6, l0_policy="estimate_at_plan"),
+               (128, 96), jnp.float64)
+    spec = registry.get_polar(p.method)
+    assert not spec.is_oracle and not spec.baseline
+    assert p.flops_estimate is not None
+    # the kernels accumulate in f32: an f64 plan must price zolo_pallas
+    # above the f32 score so auto never silently degrades precision
+    assert pallas_spec.flops_fn(128, 96, dtype=jnp.float64, **kw) > \
+        pallas_spec.flops_fn(128, 96, dtype=jnp.float32, **kw)
+
+
 def test_wrappers_share_the_plan_path():
     """polar_svd / polar_decompose resolve through the same plan cache:
     a repeated wrapper call must not re-resolve into a new plan."""
