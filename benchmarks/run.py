@@ -18,6 +18,7 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 from benchmarks import (  # noqa: E402
     accuracy,
+    grouped_scaling,
     iterations,
     kernels_bench,
     pd_compare,
@@ -35,6 +36,7 @@ SUITES = {
     "pd_profile": pd_profile.run,       # paper Table 7
     "accuracy": accuracy.run,           # paper Figure 2
     "kernels": kernels_bench.run,       # Pallas kernel parity
+    "grouped_scaling": grouped_scaling.run,  # Alg. 3 (r, sep) sweep
     "roofline": roofline.run,           # §Roofline summary (from dry-run)
 }
 

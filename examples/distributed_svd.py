@@ -46,7 +46,7 @@ def main():
                           l0_policy="estimate_at_plan")
         p = S.plan(cfg, a.shape, a.dtype, mesh=mesh)
         print(f"  plan: method={p.method} mode={p.mode} r={p.r} "
-              f"schedule_iters={len(p.schedule)}")
+              f"sep={p.sep} schedule_iters={len(p.schedule)}")
         q, h, info = p.polar(a)
         print(f"  orth={float(C.orthogonality(q)):.2e}  "
               f"rec={float(jnp.linalg.norm(q @ h - a) / jnp.linalg.norm(a)):.2e}")
@@ -55,12 +55,18 @@ def main():
         s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)
         err = float(np.abs(np.asarray(s_p) - s_ref).max())
         print(f"  Zolo-SVD singular-value error vs LAPACK: {err:.2e}")
-        # cost model: paper-faithful (per-group Gram) vs gram-shared
+        # cost model: paper-faithful (per-group Gram) vs gram-shared,
+        # and the per-device effect of the intra-group sep distribution
         iters = len(p.schedule)
         faithful = grouped_iteration_flops(m, n, r, iters, False)
         shared = grouped_iteration_flops(m, n, r, iters, True)
+        sep_aware = grouped_iteration_flops(m, n, r, iters, False,
+                                            sep=p.sep)
         print(f"  flops: paper-faithful={faithful:.3e}  "
               f"gram-shared={shared:.3e}  saving={faithful / shared:.2f}x")
+        print(f"  per-device critical path (sep={p.sep}): "
+              f"{sep_aware / r:.3e}  "
+              f"(plan.flops_estimate={p.flops_estimate:.3e})")
 
 
 if __name__ == "__main__":

@@ -24,11 +24,14 @@ through r-process-group execution (paper Algorithm 3).
 
 Plan-time contract (consumed by :mod:`repro.solver`):
 
-* ``flops_fn(m, n, *, r, kappa, grouped=False, dtype=None) -> float`` —
-  total flop estimate for solving an (m, n) problem of condition
-  ``kappa`` at Zolotarev order ``r``; ``grouped=True`` means
+* ``flops_fn(m, n, *, r, kappa, grouped=False, dtype=None, sep=1) ->
+  float`` — total flop estimate for solving an (m, n) problem of
+  condition ``kappa`` at Zolotarev order ``r``; ``grouped=True`` means
   Algorithm-3 execution (e.g. per-group Gram recomputation instead of
-  the shared product); ``dtype`` is the plan's input dtype, so a
+  the shared product) and ``sep`` is then the grouped mesh's intra-
+  group distribution degree (ndev = r * sep): per-group Gram/solve work
+  divides by it, with a psum communication term added, so the score is
+  the true per-device cost; ``dtype`` is the plan's input dtype, so a
   backend whose cost (or fitness) depends on precision can penalize
   itself — e.g. ``zolo_pallas`` accumulates in f32 and prices itself
   out of f64 auto-selection.  ``SvdConfig(method="auto")`` scores every

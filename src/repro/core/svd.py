@@ -61,17 +61,19 @@ def _grouped_zolo_adapter(a, *, mesh, l0=None, r=None, want_h: bool = False,
 # accounting (lazy import: core must not depend on repro.dist at import).
 
 
-def _zolo_flops(m, n, *, r, kappa, grouped=False, dtype=None):
+def _zolo_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1):
     from repro.dist.grouped import grouped_iteration_flops
 
     iters = _coeffs.zolo_iter_count(float(kappa), int(r))
     # single-address-space execution shares the Gram product across the r
-    # terms; grouped (Alg. 3) execution recomputes it per group
+    # terms; grouped (Alg. 3) execution recomputes it per group, with the
+    # per-group work distributed over the mesh's sep axis
     return grouped_iteration_flops(m, n, int(r), iters,
-                                   gram_shared=not grouped)
+                                   gram_shared=not grouped,
+                                   sep=int(sep) if grouped else 1)
 
 
-def _zolo_pallas_flops(m, n, *, r, kappa, grouped=False, dtype=None):
+def _zolo_pallas_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1):
     """Cost model for the Pallas-kernel Zolo backend.
 
     Same arithmetic as ``zolo_static``, but the fused kernels cut HBM
@@ -84,7 +86,7 @@ def _zolo_pallas_flops(m, n, *, r, kappa, grouped=False, dtype=None):
     the caller asked for — in both cases the backend stays scoreable
     (and explicitly selectable) but never wins ``method="auto"``.
     """
-    base = _zolo_flops(m, n, r=r, kappa=kappa, grouped=grouped)
+    base = _zolo_flops(m, n, r=r, kappa=kappa, grouped=grouped, sep=sep)
     penalty = 1.0
     if jax.default_backend() != "tpu":
         penalty *= 1e3  # interpret mode
@@ -95,14 +97,14 @@ def _zolo_pallas_flops(m, n, *, r, kappa, grouped=False, dtype=None):
     return base * penalty
 
 
-def _qdwh_flops(m, n, *, r, kappa, grouped=False, dtype=None):
+def _qdwh_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1):
     iters = _coeffs.qdwh_iter_count(float(kappa))
     # per iteration: Gram product + n^3/3 Cholesky + two solves (the QR
     # iterations cost more, but only the leading one or two use QR)
     return iters * (2.0 * m * n * n + n ** 3 / 3.0 + 2.0 * m * n * n)
 
 
-def _newton_flops(m, n, *, r, kappa, grouped=False, dtype=None):
+def _newton_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1):
     if m != n:
         return float("inf")  # scaled Newton needs a square nonsingular A
     # explicit pivoted-LU inverse (~2 n^3) per iteration, ~9 iterations

@@ -57,13 +57,23 @@ def _polar_update(x, t, a, mhat):
 class ZoloOps(NamedTuple):
     """Injectable compute ops for the Zolotarev iteration hot spots.
 
-    The iteration bodies below route their two hot loops through this
+    The iteration bodies below route their hot loops through this
     bundle, so a backend can swap the default jnp/einsum path for fused
     kernels (``repro.core.zolo_pallas`` builds one on the Pallas kernels
-    in :mod:`repro.kernels`) without touching the driver logic.
+    in :mod:`repro.kernels`) or for sep-collective distributed versions
+    (``repro.dist.grouped_ops`` all-reduces partial Grams over the
+    intra-group "sep" mesh axis) without touching the driver logic.
 
     * ``gram(x, c=0.0)``          -> X^T X + c I, f32-or-better
       accumulation (callers cast the result to the working dtype).
+      ``x`` is the iterate (or a factor sharing its row distribution,
+      e.g. the CholeskyQR2 Q1): a distributed implementation holds an
+      (m/sep, n) row block and must all-reduce the partial product to
+      the *global* Gram.
+    * ``gram_local(q, c=0.0)``    -> same contract for an operand that
+      is *replicated* (not row-distributed) — the CholeskyQR2 identity
+      block Q2.  Never cross-device-reduced; single-address-space
+      bundles point it at the same implementation as ``gram``.
     * ``polar_update(x, t, a, mhat)`` -> mhat * (X + sum_j a[j] T[j])
       with ``t`` the stacked (r, m, n) terms — the iteration combine
       (paper's DGSUM2D role).
@@ -71,6 +81,7 @@ class ZoloOps(NamedTuple):
 
     gram: Callable = _gram
     polar_update: Callable = _polar_update
+    gram_local: Callable = _gram
 
 
 DEFAULT_OPS = ZoloOps()
@@ -121,7 +132,13 @@ def term_sum_cholqr2(x, c_odd, a, *, ops: ZoloOps = DEFAULT_OPS):
     shifted Cholesky QR of [X; sqrt(c_j) I].  Explicit Q (paper's MPDORGQR
     role) keeps the term stable for much smaller c_j than a single
     Cholesky.  Shared with :mod:`repro.dist.grouped` like
-    :func:`term_sum_chol`."""
+    :func:`term_sum_chol`.
+
+    Both Gram passes route through ``ops``: the first (and the Q1 part
+    of the second) uses ``ops.gram`` — Q1 shares X's row distribution —
+    while the replicated identity-block part Q2^T Q2 uses
+    ``ops.gram_local`` so a sep-distributed bundle does not all-reduce
+    (and thereby over-count) it."""
     n = x.shape[-1]
     dtype = x.dtype
     r = c_odd.shape[0]
@@ -140,11 +157,7 @@ def term_sum_cholqr2(x, c_odd, a, *, ops: ZoloOps = DEFAULT_OPS):
         l1, jnp.broadcast_to(eye, (r, n, n)),
         left_side=False, lower=True, transpose_a=True)
     # Second pass restores orthogonality: G2 = Q^T Q = Q1^T Q1 + Q2^T Q2.
-    g2 = (jnp.einsum("jmk,jmn->jkn", q1, q1,
-                     preferred_element_type=jnp.promote_types(dtype, jnp.float32))
-          + jnp.einsum("jmk,jmn->jkn", q2, q2,
-                       preferred_element_type=jnp.promote_types(dtype, jnp.float32))
-          ).astype(dtype)
+    g2 = (ops.gram(q1) + ops.gram_local(q2)).astype(dtype)
     l2 = jnp.linalg.cholesky(g2)
     q1 = jax.lax.linalg.triangular_solve(
         l2, q1, left_side=False, lower=True, transpose_a=True)
@@ -164,11 +177,17 @@ def _zolo_iter_cholqr2(x, c, a, mhat, *, ops: ZoloOps = DEFAULT_OPS):
     return ops.polar_update(x, t[None], one, mhat)
 
 
-def term_sum_householder(x, c_odd, a, block: int = 32):
+def term_sum_householder(x, c_odd, a, block: int = 32, *,
+                         ops: ZoloOps = DEFAULT_OPS):
     """sum_j (a_j / sqrt(c_j)) Q1_j Q2_j^T via blocked *structured*
     Householder QR of [X; sqrt(c_j) I] (MPDGEQRF/MPDORGQR analogue, §3.1)
     over the given odd-coefficient slice.  Shared with
-    :mod:`repro.dist.grouped` like :func:`term_sum_chol`."""
+    :mod:`repro.dist.grouped` like :func:`term_sum_chol`.
+
+    ``ops`` is accepted for term-signature uniformity only: the blocked
+    Householder QR has no kernel or sep-distributed implementation, so
+    this term requires the *full* (undistributed) ``x`` — the grouped
+    driver rejects qr_mode="householder" on a sep>1 mesh."""
     dtype = x.dtype
     terms = []
     for j in range(c_odd.shape[0]):

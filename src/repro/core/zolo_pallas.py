@@ -33,6 +33,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax.numpy as jnp
+
 from repro.core import zolo as _zolo
 from repro.kernels import ops as _kops
 
@@ -50,14 +52,26 @@ def pallas_zolo_ops(*, bn: int = 256, bk: int = 512, bm: int = 256,
 
     The kernels are 2-D; batched inputs (reached via ``vmap`` in
     ``SvdPlan.svd_batched``) map over their leading axes outside this
-    bundle, so each call still sees one (m, n) problem.  f64 inputs are
+    bundle, so each call still sees one (m, n) problem.  An explicitly
+    *stacked* r-term operand — the CholeskyQR2 second-pass Gram over
+    (r, m, n) Q factors — unrolls the 2-D kernel over its static leading
+    axis (r is small, 2..8), so that hot spot runs on the kernel too
+    instead of falling back to a batched einsum.  f64 inputs are
     accepted but accumulate in f32 (the kernels' MXU dtype policy);
     callers needing full f64 stay on the default jnp ops.
     """
 
     def gram(x, c=0.0):
+        if x.ndim == 3 and x.shape[0] <= 8:
+            # static r-stack (term batch; Table 1 keeps r <= 8): unroll
+            # the 2-D kernel.  Larger leading dims are data batches, not
+            # term stacks — unrolling those would bloat the trace, so
+            # they stay on the batched jnp path below.
+            return jnp.stack([
+                _kops.gram(x[j], c, bn=bn, bk=bk, use_pallas=use_pallas)
+                for j in range(x.shape[0])])
         if x.ndim != 2:
-            return _zolo._gram(x, c)  # kernels are 2-D; jnp path batches
+            return _zolo._gram(x, c)  # data batches stay on jnp
         return _kops.gram(x, c, bn=bn, bk=bk, use_pallas=use_pallas)
 
     def polar_update(x, t, a, mhat):
@@ -66,7 +80,9 @@ def pallas_zolo_ops(*, bn: int = 256, bk: int = 512, bm: int = 256,
         return _kops.polar_update(x, t, a, mhat, bm=bm, bn=bn,
                                   use_pallas=use_pallas)
 
-    return _zolo.ZoloOps(gram=gram, polar_update=polar_update)
+    # single address space: a replicated operand's Gram is the same op
+    return _zolo.ZoloOps(gram=gram, polar_update=polar_update,
+                         gram_local=gram)
 
 
 def zolo_pd_pallas(a, *, l0: Optional[float] = None,

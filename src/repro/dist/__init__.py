@@ -6,7 +6,10 @@ Two modules, two concerns:
   (models, optimizer, data, launch) targets; mesh binding happens once,
   at launch, via a :class:`LogicalRules` table.
 * :mod:`repro.dist.grouped` — the paper's r-process-group Zolo-PD
-  (Algorithm 3) on a ("zolo", "sep") mesh via ``shard_map``.
+  (Algorithm 3) on a ("zolo", "sep") mesh via ``shard_map``: r term
+  groups over "zolo", each term's rows (and Gram/QR work) distributed
+  over "sep" through the sep-collective ops bundle of
+  :mod:`repro.dist.grouped_ops`.
 
 See ``src/repro/dist/README.md`` for the Algorithm-3 -> mesh mapping.
 """
@@ -16,6 +19,7 @@ from repro.dist.grouped import (
     grouped_zolo_pd_static,
     zolo_group_mesh,
 )
+from repro.dist.grouped_ops import sep_reduce_ops
 from repro.dist.sharding import (
     REPLICATED,
     LogicalRules,
@@ -39,6 +43,7 @@ __all__ = [
     "hint",
     "hint_tree",
     "logical_sharding",
+    "sep_reduce_ops",
     "tree_shardings",
     "zolo_group_mesh",
 ]

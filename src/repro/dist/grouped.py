@@ -3,19 +3,30 @@
 The r Zolotarev terms of eq. (12) are embarrassingly parallel: term j
 only needs X and its own shift c_{2j-1}.  The paper runs each term in its
 own ScaLAPACK process group (BLACS contexts) and combines with DGSUM2D.
-Here the same decomposition is a 2-D device mesh:
+Here the same two-level decomposition is a 2-D device mesh:
 
-    zolo  (size r)        — one *group* per Zolotarev term
-    sep   (size ndev/r)   — devices *inside* a group (the per-group
-                            ScaLAPACK grid; spare capacity today, the
-                            intra-group 2-D block distribution tomorrow)
+    zolo  (size r)        — one *group* per Zolotarev term (the paper's
+                            TOP context)
+    sep   (size ndev/r)   — devices *inside* a group (the paper's SEP
+                            contexts — the per-group ScaLAPACK grid).
+                            The iterate X is sharded row-wise over this
+                            axis, so one term's Cholesky/QR work is
+                            itself distributed and per-device memory for
+                            the m x n iterate is O(m n / sep).
 
 ``shard_map`` partitions the per-iteration coefficient arrays over
-"zolo", so each group's body computes exactly one shifted factorization —
-recomputing its own Gram matrix, as the paper's groups do (the
+"zolo" and the iterate over "sep".  Each group's body computes exactly
+one shifted factorization on its row blocks — the Gram product is a
+local partial product + one ``psum`` over "sep"
+(:func:`repro.dist.grouped_ops.sep_reduce_ops`; the paper's per-grid
+PDSYRK + DGSUM2D), recomputed per group as the paper's groups do (the
 single-address-space gram-*sharing* optimization lives in
-:mod:`repro.core.zolo`) — and the weighted sum of terms is one
-``psum`` over the "zolo" axis (the DGSUM2D role).
+:mod:`repro.core.zolo`) — and the weighted sum of terms is one ``psum``
+over the "zolo" axis (the TOP-context DGSUM2D role).  That combine is
+fused: each group contributes ``mhat * (xw * X + a * T)`` with ``xw``
+one-hot over groups (:mod:`repro.kernels.grouped_combine`; compiled on
+TPU, jnp oracle elsewhere), so the psum output *is* the next iterate
+and no replicated post-psum epilogue pass remains.
 
 The schedule is trace-time (:func:`repro.core.coeffs.zolo_schedule_np`),
 matching :func:`repro.core.zolo.zolo_pd_static`: first iteration via
@@ -36,6 +47,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import coeffs as _coeffs
 from repro.core import zolo as _zolo
 from repro.core.qdwh import PolarInfo
+from repro.dist import grouped_ops as _gops
 
 
 def zolo_group_mesh(r: int, devices=None) -> Mesh:
@@ -70,21 +82,26 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
                            r: Optional[int] = None, max_iters: int = 6,
                            qr_mode: str = "cholqr2", qr_iters: int = 1,
                            alpha=None, return_info: bool = False,
-                           schedule=None):
+                           schedule=None, combine_kernel=None):
     """Grouped (Alg. 3) Zolo-PD orthogonal factor of ``a`` (m >= n).
 
     ``a`` must have singular values in [l0 * alpha, alpha] (alpha=1 when
     omitted, i.e. pre-scaled like :func:`repro.core.zolo.zolo_pd_static`).
     ``mesh`` must come from :func:`zolo_group_mesh` with a "zolo" axis of
-    size ``r``.  ``qr_mode`` / ``qr_iters`` select the stable-regime term
-    for the first iterations exactly as in ``zolo_pd_static``.  A
-    precomputed ``schedule`` (sequence of
+    size ``r``; a "sep" axis of size > 1 distributes each term's rows
+    (and its Gram/QR work) over the group's devices.  ``qr_mode`` /
+    ``qr_iters`` select the stable-regime term for the first iterations
+    exactly as in ``zolo_pd_static`` (qr_mode="householder" requires a
+    sep axis of size 1: structured Householder QR is not row-
+    distributable).  A precomputed ``schedule`` (sequence of
     :class:`repro.core.coeffs.ZoloIteration`, e.g. bound once by an
     ``SvdPlan``) takes precedence over ``l0``/``max_iters`` — the plan
     builds it at plan time and this driver only lays it out over the
-    mesh.  Returns Q only (or (Q, PolarInfo) with ``return_info=True``);
-    form H with ``repro.core.form_h(q, a)`` (the paper forms H the same
-    way, after the combine).
+    mesh.  ``combine_kernel`` forces (True) or suppresses (False) the
+    Pallas grouped-combine kernel; the default (None) compiles it on TPU
+    and uses the jnp path elsewhere.  Returns Q only (or (Q, PolarInfo)
+    with ``return_info=True``); form H with ``repro.core.form_h(q, a)``
+    (the paper forms H the same way, after the combine).
     """
     if a.ndim != 2:
         raise ValueError(f"grouped Zolo-PD takes one matrix; got {a.shape}")
@@ -100,6 +117,13 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
     if qr_mode not in _TERM_FNS:
         raise ValueError(f"unknown qr_mode: {qr_mode!r} "
                          f"(one of {sorted(_TERM_FNS)})")
+    has_sep = "sep" in mesh.axis_names
+    nsep = int(mesh.shape["sep"]) if has_sep else 1
+    if nsep > 1 and qr_mode == "householder" and qr_iters > 0:
+        raise ValueError(
+            "qr_mode='householder' needs the full iterate on every "
+            "device (structured Householder QR is not row-distributed); "
+            "use a sep=1 mesh (r == ndev) or qr_mode='cholqr2'")
 
     if schedule is not None:
         sched = list(schedule)
@@ -119,23 +143,59 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
     mhats = jnp.asarray([it.mhat for it in sched], coeff_dtype)
     x0 = a if alpha is None else a / jnp.asarray(alpha, a.dtype)
 
+    m, n = x0.shape
+    # Row padding to a "sep" multiple: zero rows are exact for every step
+    # (zero Gram contribution, zero solve rows, zero stays zero through
+    # the combine), so pad once outside and slice after.
+    m_pad = m + (-m) % nsep
+    if m_pad != m:
+        x0 = jnp.pad(x0, ((0, m_pad - m), (0, 0)))
+    x_spec = P("sep", None) if has_sep else P()
+    ops = _gops.sep_reduce_ops() if has_sep else _zolo.DEFAULT_OPS
+    one = jnp.ones((1,), coeff_dtype)
+    if combine_kernel is None:
+        # the kernel accumulates in f32: never pick it by default for
+        # wider-than-f32 inputs (the f64 parity tolerances would sink)
+        combine_kernel = (jax.default_backend() == "tpu"
+                          and jnp.dtype(a.dtype).itemsize <= 4)
+    # pallas_call has no shard_map replication rule; the psum over
+    # "zolo" establishes the out_specs replication either way, so rep
+    # checking is only disabled when the kernel path actually runs
+    check_rep = not combine_kernel
+
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(P(), P(None, "zolo"), P(None, "zolo"), P()),
-        out_specs=P())
+        in_specs=(x_spec, P(None, "zolo"), P(None, "zolo"), P()),
+        out_specs=x_spec, check_rep=check_rep)
     def run(x, c_grp, a_grp, mh):
         # c_grp / a_grp: (iters, 1) — this group's shift and weight per
-        # iteration.  x is replicated; each group recomputes its own Gram
-        # inside term_sum_* (paper-faithful; no cross-group reuse).
+        # iteration.  x: this device's (m_pad/sep, n) row block of the
+        # iterate, replicated across groups.  Per-shard proof that the
+        # sep axis is a real distribution (not replication): each device
+        # holds 1/sep of the rows, so its Gram input — and its O(m n /
+        # sep) memory — shrinks with the group size.
+        assert x.shape == (m_pad // nsep, n), \
+            (x.shape, m_pad, nsep, "iterate not row-sharded over 'sep'")
+        assert c_grp.shape == (len(sched), 1) == a_grp.shape, \
+            (c_grp.shape, "coefficients not split over 'zolo'")
+        # exactly one group carries X into the combine psum (exact — no
+        # 1/r rescale rounding), every group adds its weighted term
+        xw = (jax.lax.axis_index("zolo") == 0).astype(coeff_dtype)
         for i in range(len(sched)):
             term = (_TERM_FNS[qr_mode] if i < qr_iters
                     else _zolo.term_sum_chol)
-            t = term(x, c_grp[i], a_grp[i])
-            t = jax.lax.psum(t, "zolo")  # DGSUM2D combine over groups
-            x = mh[i].astype(x.dtype) * (x + t)
+            # unit term weight: the a_j scaling is linear, so it fuses
+            # into the combine kernel below instead of a separate pass
+            t = term(x, c_grp[i], one, ops=ops)
+            y = _fused_combine(x, t, a_grp[i], mh[i], xw,
+                               use_pallas=combine_kernel)
+            # DGSUM2D over groups; the psum result IS the next iterate
+            x = jax.lax.psum(y, "zolo")
         return x
 
     q = run(x0, c_odd, a_wts, mhats)
+    if m_pad != m:
+        q = q[:m]
     if return_info:
         info = PolarInfo(iterations=jnp.int32(len(sched)),
                          residual=jnp.asarray(0.0, a.dtype),
@@ -144,22 +204,48 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
     return q
 
 
-def grouped_iteration_flops(m: int, n: int, r: int, iters: int,
-                            gram_shared: bool) -> float:
-    """Total flops (summed over all r groups) of ``iters`` Cholesky-variant
-    Zolotarev iterations on an m x n matrix.
+def _fused_combine(x, t, a, mhat, xw, use_pallas=None):
+    """One group's combine contribution mhat * (xw * x + a * t) through
+    the grouped-combine kernel wrapper (jnp oracle off-TPU)."""
+    from repro.kernels import ops as _kops
 
-    Per term: one n x n Cholesky (n^3/3) plus two triangular solves
-    against m right-hand sides (2 * m n^2).  The Gram product (2 m n^2)
-    is paid once per *group* in the paper-faithful mode (each group owns
-    one term and recomputes G) and once per *iteration* in the
-    single-address-space gram-shared mode.  Divide by r for the per-group
-    critical path in the r-way parallel setting.
+    return _kops.grouped_combine(x, t[None], a, mhat, xw,
+                                 use_pallas=use_pallas)
+
+
+def grouped_iteration_flops(m: int, n: int, r: int, iters: int,
+                            gram_shared: bool, sep: int = 1,
+                            comm_flops_per_word: float = 32.0) -> float:
+    """Flops (summed over the r groups, per device within a group) of
+    ``iters`` Cholesky-variant Zolotarev iterations on an m x n matrix.
+
+    Per term: one n x n Cholesky (n^3/3; replicated on every device of
+    the group — the CholeskyQR structure keeps it un-distributed) plus
+    two triangular solves against the local row block (2 m n^2 / sep).
+    The Gram product (2 m n^2 / sep local partial + one "sep"-axis psum
+    of n^2 words) is paid once per *group* in the paper-faithful mode
+    (each group owns one term and recomputes G) and once per *iteration*
+    in the single-address-space gram-shared mode (sep must be 1 there:
+    gram sharing is the one-address-space ablation).  Collectives are
+    charged at ``comm_flops_per_word`` flop-equivalents per word: the
+    n^2 "sep" Gram reduction and the (m n / sep) "zolo" combine — so the
+    model prices the sep speed-up against its communication and the
+    planner's grouped scoring (this total / r = the per-group critical
+    path) stays honest for sep > 1 meshes.
     """
-    gram = 2.0 * m * n * n
-    per_term = n ** 3 / 3.0 + 2.0 * m * n * n
+    if sep < 1:
+        raise ValueError(f"sep degree must be >= 1, got {sep}")
+    if gram_shared and sep != 1:
+        raise ValueError("gram_shared is the single-address-space mode; "
+                         "the sep axis does not apply (got sep="
+                         f"{sep})")
+    gram = 2.0 * m * n * n / sep
+    per_term = n ** 3 / 3.0 + 2.0 * m * n * n / sep
     if gram_shared:
         per_iter = gram + r * per_term
     else:
-        per_iter = r * (gram + per_term)
+        comm = comm_flops_per_word * (
+            (float(n * n) if sep > 1 else 0.0)      # "sep" Gram psum
+            + (m * n / sep if r > 1 else 0.0))      # "zolo" combine psum
+        per_iter = r * (gram + per_term + comm)
     return float(iters * per_iter)

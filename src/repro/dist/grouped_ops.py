@@ -1,0 +1,58 @@
+"""Sep-collective :class:`~repro.core.zolo.ZoloOps`: the intra-group 2-D
+distribution of one Zolotarev term (the paper's per-group ScaLAPACK/SEP
+grid, §4).
+
+Inside a group, the iterate X lives as an (m/sep, n) row block per
+device.  The *only* place the term math needs the whole matrix is the
+Gram product, and CholeskyQR2's communication-avoiding structure makes
+that one collective: each device forms the partial product of its row
+block and a single ``psum`` over the "sep" axis yields the global
+``X^T X`` (the paper's per-grid PDSYRK + DGSUM2D).  Everything else in
+:mod:`repro.core.zolo`'s term bodies — the n x n Cholesky (replicated
+per device, the standard CholeskyQR trick), the triangular solves and
+the polar update (row-local) — already operates block-row-wise, so the
+*same* iteration code runs distributed by swapping this bundle in: no
+forked math.
+
+``sep_reduce_ops`` wraps any base bundle (the default jnp ops, or the
+Pallas-kernel ops of :mod:`repro.core.zolo_pallas`): the base computes
+the local partial product, this layer adds the collective.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import zolo as _zolo
+
+
+def sep_reduce_ops(base: Optional[_zolo.ZoloOps] = None,
+                   *, axis: str = "sep") -> _zolo.ZoloOps:
+    """A ZoloOps bundle whose ``gram`` all-reduces over the row-shard
+    ``axis``.
+
+    Must run inside a ``shard_map`` body over a mesh with that axis; the
+    operand of ``gram`` is the local (m/sep, n) row block and the result
+    is the *global* (n, n) shifted Gram, identical on every device of
+    the group.  ``gram_local`` stays the base implementation (replicated
+    operands such as the CholeskyQR2 identity block are never reduced),
+    and ``polar_update`` is row-local, so the base version applies to
+    the block unchanged.
+    """
+    base = _zolo.DEFAULT_OPS if base is None else base
+
+    def gram(x, c=0.0):
+        # local partial product first, one psum, THEN the +cI shift —
+        # shifting before the reduction would add c * sep to the
+        # diagonal.
+        g = jax.lax.psum(base.gram(x, 0.0), axis)
+        if isinstance(c, (int, float)) and c == 0.0:
+            return g
+        n = x.shape[-1]
+        return g + jnp.asarray(c, g.dtype) * jnp.eye(n, dtype=g.dtype)
+
+    return _zolo.ZoloOps(gram=gram, polar_update=base.polar_update,
+                         gram_local=base.gram_local)

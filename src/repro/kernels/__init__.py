@@ -1,10 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-One module per kernel (``gram``, ``polar_update``, ``matmul``,
-``flash_attention``) + jnp oracles in ``ref.py`` + the jit'd public
-wrappers in ``ops.py`` (padding, tile selection, interpret-mode fallback
-off-TPU).  The solver reaches these through the registered
+One module per kernel (``gram``, ``polar_update``, ``grouped_combine``,
+``matmul``, ``flash_attention``) + jnp oracles in ``ref.py`` + the jit'd
+public wrappers in ``ops.py`` (padding, tile selection, interpret-mode
+fallback off-TPU).  The solver reaches these through the registered
 ``zolo_pallas`` backend (:mod:`repro.core.zolo_pallas`), which injects
 ``ops.gram`` / ``ops.polar_update`` into the shared Zolotarev driver via
-its :class:`repro.core.zolo.ZoloOps` bundle.
+its :class:`repro.core.zolo.ZoloOps` bundle, and through the grouped
+(Algorithm 3) driver in :mod:`repro.dist.grouped`, whose per-group
+combine contribution runs on ``ops.grouped_combine`` (fused with the
+"zolo"-axis psum: the collective carries the next iterate).
 """

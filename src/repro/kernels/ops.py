@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.gram import gram_kernel_call
+from repro.kernels.grouped_combine import grouped_combine_kernel_call
 from repro.kernels.matmul import matmul_kernel_call
 from repro.kernels.polar_update import polar_update_kernel_call
 
@@ -94,6 +95,33 @@ def polar_update(x, t, a, mhat, *, bm: int = 256, bn: int = 256,
     t_p, _ = _pad_to(t, bm, bn)
     out = polar_update_kernel_call(x_p, t_p, a, mhat, bm=bm, bn=bn,
                                    interpret=_interpret())
+    return out[:m, :n]
+
+
+def grouped_combine(x, t, a, mhat, xw=1.0, *, bm: int = 256, bn: int = 256,
+                    use_pallas=None):
+    """Y = mhat * (xw * X + sum_j a_j T_j) — one group's pre-psum combine
+    contribution (see :mod:`repro.kernels.grouped_combine`).
+
+    ``psum(Y, "zolo")`` with ``xw`` one-hot over the groups yields the
+    next Zolotarev iterate directly.  ``use_pallas=None`` (the default)
+    compiles the kernel on TPU and uses the jnp oracle elsewhere — this
+    op sits on the main grouped (Alg. 3) path, where CPU interpret mode
+    would execute the kernel body in Python per device; pass
+    ``use_pallas=True`` to force the kernel (interpret mode off-TPU, the
+    parity-test path) or ``False`` to force the oracle.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.grouped_combine_ref(x, t, a, mhat, xw)
+    m, n = x.shape
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    x_p, _ = _pad_to(x, bm, bn)
+    t_p, _ = _pad_to(t, bm, bn)
+    out = grouped_combine_kernel_call(x_p, t_p, a, mhat, xw, bm=bm, bn=bn,
+                                      interpret=_interpret())
     return out[:m, :n]
 
 

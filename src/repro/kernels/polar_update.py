@@ -1,56 +1,30 @@
-"""Pallas TPU kernel: fused r-term polar update (paper Alg. 3 step 4d).
+"""Pallas TPU kernel: fused r-term polar update (paper Alg. 1 step 4d).
 
 X2 = mhat * (X + sum_j a_j T_j)
 
-is the combine step after the r groups' factorizations — the paper does it
-with DGSUM2D; on one TPU slice it is a memory-bound weighted reduction over
-r+1 arrays.  Fusing it avoids r separate full-array read-modify-writes
-(2x-3x less HBM traffic for r = 2..3 than naive chaining).
+is the combine step after the r shifted factorizations — a memory-bound
+weighted reduction over r+1 arrays.  Fusing it avoids r separate
+full-array read-modify-writes (2x-3x less HBM traffic for r = 2..3 than
+naive chaining).
 
-T is stacked (r, m, n); the r loop is unrolled inside the kernel (r is
-small and static: 2..8 per the paper's Table 1 policy).
+This is exactly the grouped combine of
+:mod:`repro.kernels.grouped_combine` specialized to xw = 1 (every
+single-address-space "group" carries X), so there is one kernel body:
+this call delegates, keeping tile/dtype behavior in one place.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.kernels.grouped_combine import grouped_combine_kernel_call
 
 
-def _polar_update_kernel(x_ref, t_ref, a_ref, mhat_ref, out_ref, *, r: int):
-    acc = x_ref[...].astype(jnp.float32)
-    for j in range(r):
-        acc += a_ref[j] * t_ref[j].astype(jnp.float32)
-    out_ref[...] = (mhat_ref[0] * acc).astype(out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def polar_update_kernel_call(x, t, a, mhat, *, bm: int = 256, bn: int = 256,
                              interpret: bool = False):
     """X2 = mhat * (X + sum_j a[j] * T[j]).
 
-    x: (m, n); t: (r, m, n); a: (r,); mhat: scalar.  Output dtype follows x.
+    x: (m, n); t: (r, m, n); a: (r,); mhat: scalar.  Output dtype follows
+    x.  (xw = 1.0 is exact in f32: the shared kernel's extra multiply
+    does not perturb the result.)
     """
-    m, n = x.shape
-    r = t.shape[0]
-    assert t.shape == (r, m, n)
-    assert m % bm == 0 and n % bn == 0
-    a_arr = jnp.asarray(a, jnp.float32)
-    mhat_arr = jnp.asarray(mhat, jnp.float32).reshape(1)
-    grid = (m // bm, n // bn)
-    return pl.pallas_call(
-        functools.partial(_polar_update_kernel, r=r),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((r, bm, bn), lambda i, j: (0, i, j)),
-            pl.BlockSpec((r,), lambda i, j: (0,)),
-            pl.BlockSpec((1,), lambda i, j: (0,)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
-        interpret=interpret,
-    )(x, t, a_arr, mhat_arr)
+    return grouped_combine_kernel_call(x, t, a, mhat, 1.0, bm=bm, bn=bn,
+                                       interpret=interpret)

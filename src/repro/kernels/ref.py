@@ -25,6 +25,18 @@ def polar_update_ref(x, t, a, mhat):
     return (jnp.asarray(mhat, jnp.float32) * acc).astype(x.dtype)
 
 
+def grouped_combine_ref(x, t, a, mhat, xw=1.0):
+    """Y = mhat * (xw * x + sum_j a_j T_j), dtype of x.
+
+    Accumulates in f32-or-better (f64 inputs stay f64: off-TPU this
+    oracle IS the grouped driver's combine, and the distributed parity
+    tests run in f64)."""
+    ct = jnp.promote_types(x.dtype, jnp.float32)
+    acc = jnp.asarray(xw, ct) * x.astype(ct) + jnp.einsum(
+        "j,jmn->mn", jnp.asarray(a, ct), t.astype(ct))
+    return (jnp.asarray(mhat, ct) * acc).astype(x.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, scale=None, window=None):
     """Reference causal (optionally sliding-window) attention.
 

@@ -80,6 +80,9 @@ class PlanResolution:
     qr_mode: Optional[str]   # None -> backend default
     qr_iters: Optional[int]  # None -> backend default
     nb: int
+    # grouped (Alg. 3) mesh factorization ndev = r * sep: the intra-group
+    # distribution degree (size of the mesh's "sep" axis; 1 otherwise)
+    sep: int = 1
 
 
 # config knobs routed through plan_fn, and the output keys that count as
@@ -106,8 +109,14 @@ def _capability_ok(spec, mode: str) -> bool:
 
 
 def _select_method(mode: str, m: int, n: int, r_hint: int,
-                   kappa: float, dtype=None):
-    """method="auto": capability filter, then cheapest by ``flops_fn``."""
+                   kappa: float, dtype=None, sep: int = 1):
+    """method="auto": capability filter, then cheapest by ``flops_fn``.
+
+    ``sep`` is the grouped mesh's intra-group distribution degree: the
+    cost model divides each group's Gram/solve work by it (plus a psum
+    communication term), so auto scoring ranks grouped backends by their
+    true per-device critical path on the (r, sep) mesh.
+    """
     cands = [_registry.get_polar(name) for name in _registry.list_polar()]
     cands = [s for s in cands if _capability_ok(s, mode)]
     if not cands:
@@ -119,7 +128,7 @@ def _select_method(mode: str, m: int, n: int, r_hint: int,
             return (1, 0.0, spec.name)  # unranked: after every costed spec
         flops = float(spec.flops_fn(m, n, r=r_hint, kappa=kappa,
                                     grouped=(mode == "grouped"),
-                                    dtype=dtype))
+                                    dtype=dtype, sep=sep))
         if mode == "grouped":
             flops /= max(r_hint, 1)  # per-group critical path
         return (0, flops, spec.name)
@@ -191,19 +200,40 @@ def _resolve(config: SvdConfig, shape, dtype, mesh):
         kappa = 1.0 / float(l0)
     kappa_eff = kappa if kappa is not None else 1e6  # scoring default
 
-    # --- r (paper Table 1 via choose_r, or the mesh's group count) ----
+    # --- r / sep (paper Table 1 via choose_r, or the mesh's (r, sep)
+    #     factorization of the device count) ---------------------------
     r = config.r
+    sep = 1
     if mode == "grouped":
         mesh_r = None
         try:
             mesh_r = int(mesh.shape["zolo"])
         except Exception:
             pass  # capability check below rejects non-grouped specs
+        try:
+            sep = int(mesh.shape["sep"])
+        except Exception:
+            sep = 1  # custom mesh without an intra-group axis
+        if mesh_r is not None and mesh_r * sep != mesh.size:
+            raise ValueError(
+                f"grouped execution lays ndev = r * sep out as the "
+                f"('zolo', 'sep') factorization; mesh axes "
+                f"{dict(mesh.shape)} do not factor its {mesh.size} "
+                f"devices — build the mesh with zolo_group_mesh(r)")
         if r is None:
             r = mesh_r
         elif mesh_r is not None and mesh_r != r:
             raise ValueError(f"config.r={r} but the mesh 'zolo' axis has "
                              f"size {mesh_r}")
+        if sep > 1 and config.qr_mode == "householder" and \
+                (config.qr_iters is None or config.qr_iters > 0):
+            # fail at plan time, not at first execution: the structured
+            # Householder first iteration needs the full iterate on
+            # every device (see grouped_zolo_pd_static)
+            raise ValueError(
+                f"qr_mode='householder' is not row-distributable over "
+                f"the sep={sep} intra-group axis; use a sep=1 mesh "
+                f"(r == ndev) or qr_mode='cholqr2'")
     elif r is None and kappa is not None:
         r = _coeffs.choose_r(kappa_eff)
 
@@ -213,7 +243,7 @@ def _resolve(config: SvdConfig, shape, dtype, mesh):
     else:
         spec = _select_method(mode, m, n,
                               r or _coeffs.choose_r(kappa_eff), kappa_eff,
-                              dtype=dtype)
+                              dtype=dtype, sep=sep)
     _validate_capability(spec, mode, config)
 
     res = PlanResolution(method=spec.name, mode=mode,
@@ -221,7 +251,7 @@ def _resolve(config: SvdConfig, shape, dtype, mesh):
                          r=r, l0=l0, kappa=kappa,
                          max_iters=config.max_iters,
                          qr_mode=config.qr_mode, qr_iters=config.qr_iters,
-                         nb=config.nb)
+                         nb=config.nb, sep=sep)
 
     # --- static kwargs -------------------------------------------------
     # extras pass through verbatim (a kwarg a backend does not accept
@@ -290,6 +320,13 @@ class SvdPlan:
         return self.resolution.r
 
     @property
+    def sep(self) -> int:
+        """Intra-group distribution degree of the grouped mesh (size of
+        its "sep" axis; 1 for non-grouped plans): the recorded (r, sep)
+        factorization is ndev = plan.r * plan.sep."""
+        return self.resolution.sep
+
+    @property
     def l0(self) -> Optional[float]:
         return self.resolution.l0
 
@@ -307,8 +344,9 @@ class SvdPlan:
     def flops_estimate(self) -> Optional[float]:
         """Flop estimate from the spec's ``flops_fn``, on the same basis
         ``method="auto"`` scores with: total serial flops, or the
-        per-group critical path (total / r) for grouped plans.  None
-        when the backend registers no cost model."""
+        per-group (per-device, for sep > 1 meshes) critical path
+        (total / r with the group's work divided over sep) for grouped
+        plans.  None when the backend registers no cost model."""
         if self._spec.flops_fn is None:
             return None
         res = self.resolution
@@ -317,12 +355,13 @@ class SvdPlan:
         grouped = self.mode == "grouped"
         flops = float(self._spec.flops_fn(res.m, res.n, r=r, kappa=kappa,
                                           grouped=grouped,
-                                          dtype=res.dtype))
+                                          dtype=res.dtype, sep=res.sep))
         return flops / max(r, 1) if grouped else flops
 
     def __repr__(self):
+        sep = f"sep={self.sep}, " if self.mode == "grouped" else ""
         return (f"SvdPlan(method={self.method!r}, mode={self.mode!r}, "
-                f"r={self.r}, l0={self.l0}, shape={self.shape}, "
+                f"r={self.r}, {sep}l0={self.l0}, shape={self.shape}, "
                 f"dtype={jnp.dtype(self.dtype).name}, "
                 f"eig={self.eig_method!r})")
 

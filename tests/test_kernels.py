@@ -87,6 +87,53 @@ def test_polar_update_kernel_padding_roundtrip(m, n, rng):
                                atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("m,n", [(130, 70), (257, 129)])
+def test_grouped_combine_kernel_padding_roundtrip(m, n, rng):
+    """The grouped-combine kernel (fused pre-psum contribution) through
+    the pad/slice wrapper at non-tile-multiple shapes, for both the
+    X-carrying (xw=1) and term-only (xw=0) group roles."""
+    r = 2
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((r, m, n)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal(r), jnp.float32)
+    for xw in (1.0, 0.0):
+        got = ops.grouped_combine(x, t, a, 0.93, xw, use_pallas=True)
+        want = ref.grouped_combine_ref(x, t, a, 0.93, xw)
+        assert got.shape == (m, n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_grouped_combine_psum_identity(rng):
+    """Summing per-group contributions with a one-hot xw reproduces the
+    unfused combine mhat * (x + sum_j a_j t_j) — the invariant that lets
+    the "zolo" psum carry the next iterate directly."""
+    m, n = 96, 64
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((2, m, n)), jnp.float32)
+    a = jnp.asarray([0.7, -1.3], jnp.float32)
+    mhat = 0.87
+    y0 = ops.grouped_combine(x, t[:1], a[:1], mhat, 1.0, use_pallas=True)
+    y1 = ops.grouped_combine(x, t[1:], a[1:], mhat, 0.0, use_pallas=True)
+    want = ref.polar_update_ref(x, t, a, mhat)
+    np.testing.assert_allclose(np.asarray(y0 + y1), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_grouped_combine_ref_keeps_f64(rng):
+    """Off-TPU the oracle IS the grouped driver's combine: f64 inputs
+    must accumulate in f64 (a hard f32 cast would sink the distributed
+    parity tolerances)."""
+    x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float64)
+    t = jnp.asarray(rng.standard_normal((1, 16, 8)), jnp.float64)
+    a = jnp.asarray([0.731], jnp.float64)
+    got = ref.grouped_combine_ref(x, t, a, 0.917, 1.0)
+    assert got.dtype == jnp.float64
+    want = 0.917 * (np.asarray(x) + 0.731 * np.asarray(t[0]))
+    # 1e-15: only f64 accumulation passes (an f32 cast errs at ~1e-8)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-15, rtol=0)
+
+
 def test_pick_tile_non_multiple_target_terminates():
     """A tile target that is not a 128 multiple must round down to an
     aligned divisor of the padded dim (the old decrement loop walked

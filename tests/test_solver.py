@@ -320,6 +320,53 @@ def test_auto_scores_zolo_pallas_without_picking_baselines():
         pallas_spec.flops_fn(128, 96, dtype=jnp.float32, **kw)
 
 
+def test_flops_fn_sep_degree():
+    """The grouped cost model is mesh-shape-aware: at fixed r the score
+    falls as the sep degree distributes each group's Gram/solve work,
+    communication keeps it above the ideal linear speedup, and the
+    non-grouped score ignores sep entirely."""
+    from repro.dist import grouped_iteration_flops
+
+    spec = registry.get_polar("zolo_static")
+    kw = dict(r=2, kappa=1e6, grouped=True)
+    f1 = spec.flops_fn(2048, 1024, sep=1, **kw)
+    f4 = spec.flops_fn(2048, 1024, sep=4, **kw)
+    f8 = spec.flops_fn(2048, 1024, sep=8, **kw)
+    assert f8 < f4 < f1
+    assert f4 > f1 / 4  # replicated Cholesky + psum term: not linear
+    # sep has no effect outside grouped execution
+    assert spec.flops_fn(2048, 1024, r=2, kappa=1e6, sep=4) == \
+        spec.flops_fn(2048, 1024, r=2, kappa=1e6)
+    # gram-shared accounting is the single-address-space mode: a sep
+    # degree is meaningless there and must fail loudly
+    with pytest.raises(ValueError, match="sep"):
+        grouped_iteration_flops(256, 128, 2, 5, True, sep=4)
+    with pytest.raises(ValueError, match="sep"):
+        grouped_iteration_flops(256, 128, 2, 5, False, sep=0)
+    # sep=1 keeps the pre-activation totals (cost-model back-compat,
+    # modulo the now-charged "zolo" combine psum)
+    m, n, r, iters = 512, 256, 3, 5
+    shared = grouped_iteration_flops(m, n, r, iters, True)
+    assert shared == iters * (2*m*n*n + r * (n**3/3 + 2*m*n*n))
+
+
+def test_plan_records_sep_factorization():
+    """Grouped plans record the mesh's (r, sep) factorization; the
+    degenerate single-device mesh is (r=1, sep=1).  (sep>1 meshes are
+    exercised by the 8-device subprocess tests in test_grouped.py.)"""
+    from repro.dist import zolo_group_mesh
+
+    mesh = zolo_group_mesh(1)
+    p = S.plan(S.SvdConfig(kappa=1e3, l0_policy="estimate_at_plan", r=1),
+               (64, 32), jnp.float64, mesh=mesh)
+    assert p.mode == "grouped" and p.r == 1 and p.sep == 1
+    assert "sep" not in repr(p) or "sep=1" in repr(p)
+    # non-grouped plans always record sep=1
+    p2 = S.plan(S.SvdConfig(method="zolo_static", l0=1e-3), (64, 32),
+                jnp.float64)
+    assert p2.sep == 1 and "sep" not in repr(p2)
+
+
 def test_wrappers_share_the_plan_path():
     """polar_svd / polar_decompose resolve through the same plan cache:
     a repeated wrapper call must not re-resolve into a new plan."""
