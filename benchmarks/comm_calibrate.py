@@ -1,0 +1,142 @@
+"""Calibrate ``comm_flops_per_word`` — the flop-equivalent cost the
+grouped (Algorithm 3) cost model charges per psum word.
+
+``repro.dist.grouped.grouped_iteration_flops`` prices the two
+collectives of a sep>1 mesh (the n^2-word "sep" Gram reduction and the
+(mn/sep)-word "zolo" combine) at a flat ``comm_flops_per_word`` — a
+round-number prior of 32 until measured.  This suite measures it: the
+device's matmul flop rate (how many flops fit in a second) and the
+all-reduce wall-clock per word on the local mesh, whose ratio is the
+flop-equivalents one psum word costs.  The committed ``BENCH_comm.json``
+records the CPU calibration (layout-honest; a TPU run of the same file
+regenerates honest interconnect numbers), and a calibrated value threads
+into planning via ``SvdConfig.extra["comm_flops_per_word"]`` — scored by
+every registered ``flops_fn``, never passed to the backend.
+
+Like ``grouped_scaling``, the sweep needs ``REPRO_BENCH_GROUPED_NDEV``
+(default 8) devices, so the ``run()`` suite entry re-execs this module
+in a subprocess with XLA_FLAGS set and re-emits its rows.
+
+  python -m benchmarks.comm_calibrate     (standalone: sets its own
+                                           XLA_FLAGS before jax loads)
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import subprocess
+import sys
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_COMM_JSON", "BENCH_comm.json")
+NDEV = int(os.environ.get("REPRO_BENCH_GROUPED_NDEV", "8"))
+
+if __name__ == "__main__":
+    # must happen before any jax import in this process
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={NDEV}")
+    os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+
+def _calibrate():
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import zolo_group_mesh
+    from benchmarks.common import BENCH_N, emit, time_fn
+
+    ndev = jax.device_count()
+    n = min(BENCH_N, 256)
+    dtype = jnp.float64
+    word_bytes = jnp.dtype(dtype).itemsize
+
+    # --- compute rate: the flop side of the flop-equivalent ----------
+    a = jnp.ones((n, n), dtype)
+    t_mm = time_fn(jax.jit(lambda x: x @ x), a)
+    flop_rate = 2.0 * n ** 3 / t_mm  # flops / s
+    emit("comm_calibrate.matmul_rate", t_mm * 1e6,
+         f"n={n};flops_per_s={flop_rate:.3e}")
+
+    # --- collective rate: psum wall-clock per word on the local mesh --
+    # the "sep" axis spans every device (zolo_group_mesh(1)), matching
+    # the Gram-reduction collective of a maximally-distributed group
+    mesh = zolo_group_mesh(1)
+
+    records = []
+    for words in (64 * 64, 128 * 128, 256 * 256):
+        side = int(words ** 0.5)
+        x = jnp.ones((ndev * side, side), dtype)
+
+        @jax.jit
+        @functools.partial(shard_map, mesh=mesh,
+                           in_specs=P("sep", None), out_specs=P("sep", None))
+        def allreduce(blk):
+            # each device contributes its (side, side) block; one psum
+            # over "sep" — the per-grid DGSUM2D this model prices
+            return jnp.broadcast_to(
+                jax.lax.psum(blk[:side], "sep"), blk.shape)
+
+        t_ps = time_fn(allreduce, x)
+        per_word = t_ps / words
+        flops_per_word = per_word * flop_rate
+        emit(f"comm_calibrate.psum_{side}x{side}", t_ps * 1e6,
+             f"words={words};flops_per_word={flops_per_word:.1f}")
+        records.append({"words": words, "us_per_psum": t_ps * 1e6,
+                        "flops_per_word": flops_per_word})
+
+    # suggest the mid-size measurement (small psums are latency-bound,
+    # large ones bandwidth-bound; the Gram reduction sits in between)
+    suggested = sorted(r["flops_per_word"] for r in records)[len(records) // 2]
+    record = {
+        "suite": "comm_calibrate",
+        "backend": jax.default_backend(),
+        "ndev": ndev,
+        "dtype": str(jnp.dtype(dtype)),
+        "word_bytes": word_bytes,
+        "matmul_flops_per_s": flop_rate,
+        "records": records,
+        "comm_flops_per_word": suggested,
+        "usage": "SvdConfig(extra=(('comm_flops_per_word', "
+                 f"{suggested:.1f}),))",
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("comm_calibrate.json_record", 0.0,
+         f"{BENCH_JSON};comm_flops_per_word={suggested:.1f}")
+
+
+def run():
+    """Suite entry for ``benchmarks.run``: re-exec with NDEV virtual
+    devices when this process has too few, re-emitting the subprocess
+    rows (same protocol as ``grouped_scaling``)."""
+    import jax
+    from benchmarks.common import emit
+
+    if jax.device_count() >= NDEV:
+        _calibrate()
+        return
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={NDEV}",
+        JAX_ENABLE_X64="1")
+    out = subprocess.run([sys.executable, "-m", "benchmarks.comm_calibrate"],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"comm_calibrate subprocess failed:\n{out.stderr[-2000:]}")
+    for line in out.stdout.splitlines():
+        if not line.startswith("comm_calibrate."):
+            continue
+        parts = line.split(",", 2)
+        emit(parts[0], float(parts[1]), parts[2] if len(parts) > 2 else "")
+    if not os.path.exists(BENCH_JSON):
+        raise RuntimeError(f"{BENCH_JSON} was not written")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    _calibrate()

@@ -4,9 +4,12 @@ At a fixed device count every divisor r of ndev gives a two-level layout
 ndev = r groups x sep devices: r-way term parallelism over "zolo" and
 the intra-group row distribution over "sep".  This suite runs the same
 polar solve through an ``SvdPlan`` on each factorization (method="auto",
-so the sep-aware cost model does the picking), records wall-clock,
-parity against the single-device static driver, and the plan's
-per-device flop estimate, and writes the machine-readable
+so the sep-aware cost model does the picking) twice — with the plan-time
+static schedule and with the runtime-conditioning dynamic backend
+(``l0_policy="runtime"`` -> ``zolo_grouped_dynamic``: in-graph
+sep-collective sigma_min bound + in-graph coefficients) — records
+wall-clock, parity against the single-device static driver, and the
+plan's per-device flop estimate, and writes the machine-readable
 ``BENCH_grouped.json`` record (CPU rows prove layout/parity; a TPU run
 of the same file regenerates honest wall-clock).
 
@@ -55,31 +58,44 @@ def _sweep():
     cfg = S.SvdConfig(kappa=kappa, l0_policy="estimate_at_plan")
     q_ref = None
 
+    # static (plan-time schedule) and dynamic (runtime conditioning,
+    # l0_policy="runtime") rows on every factorization: the dynamic
+    # backend's price for serving any kappa from one executable is the
+    # in-graph estimate + in-graph coefficients, visible as its
+    # wall-clock delta at equal (r, sep)
+    cfg_dyn = S.SvdConfig(l0_policy="runtime")
+
     records = []
     for r in [d for d in range(1, ndev + 1) if ndev % d == 0]:
         sep = ndev // r
         mesh = zolo_group_mesh(r)
-        p = S.plan(cfg, a.shape, a.dtype, mesh=mesh)
-        assert p.mode == "grouped" and p.r == r and p.sep == sep
-        q = p.polar(a, want_h=False)[0]
-        if q_ref is None:
-            ref = S.plan(S.SvdConfig(method="zolo_static", kappa=kappa,
-                                     l0_policy="estimate_at_plan", r=r),
-                         a.shape, a.dtype)
-            q_ref = ref.polar(a, want_h=False)[0]
-        t = time_fn(lambda x: p.polar(x, want_h=False)[0], a)
-        orth = float(C.orthogonality(q))
-        err = float(jnp.abs(q - q_ref).max())
-        emit(f"grouped_scaling.r{r}_sep{sep}", t * 1e6,
-             f"method={p.method};flops_per_dev={p.flops_estimate:.3e};"
-             f"orth={orth:.2e};err_vs_ref={err:.2e}")
-        records.append({
-            "r": r, "sep": sep, "method": p.method,
-            "schedule_iters": len(p.schedule),
-            "us_per_call": t * 1e6,
-            "flops_per_device": p.flops_estimate,
-            "orth": orth, "max_err_vs_single_device": err,
-        })
+        for label, c in (("static", cfg), ("dynamic", cfg_dyn)):
+            p = S.plan(c, a.shape, a.dtype, mesh=mesh)
+            assert p.mode == "grouped" and p.r == r and p.sep == sep
+            if label == "dynamic":
+                assert p.method == "zolo_grouped_dynamic", p.method
+            q = p.polar(a, want_h=False)[0]
+            if q_ref is None:
+                ref = S.plan(S.SvdConfig(method="zolo_static", kappa=kappa,
+                                         l0_policy="estimate_at_plan",
+                                         r=r),
+                             a.shape, a.dtype)
+                q_ref = ref.polar(a, want_h=False)[0]
+            t = time_fn(lambda x: p.polar(x, want_h=False)[0], a)
+            orth = float(C.orthogonality(q))
+            err = float(jnp.abs(q - q_ref).max())
+            emit(f"grouped_scaling.{label}_r{r}_sep{sep}", t * 1e6,
+                 f"method={p.method};flops_per_dev={p.flops_estimate:.3e};"
+                 f"orth={orth:.2e};err_vs_ref={err:.2e}")
+            records.append({
+                "r": r, "sep": sep, "method": p.method,
+                "schedule": label,
+                "schedule_iters": (len(p.schedule)
+                                   if p.schedule is not None else None),
+                "us_per_call": t * 1e6,
+                "flops_per_device": p.flops_estimate,
+                "orth": orth, "max_err_vs_single_device": err,
+            })
 
     record = {
         "suite": "grouped_scaling",

@@ -23,8 +23,10 @@ def run():
     c, aj, mh = CF.zolo_coeffs_np(0.9 / kappa, r)
     cj, ajj, mhj = jnp.asarray(c), jnp.asarray(aj), jnp.asarray(mh)
 
-    qr_iter = jax.jit(lambda x: Z._zolo_iter_cholqr2(x, cj, ajj, mhj))
-    chol_iter = jax.jit(lambda x: Z._zolo_iter_chol(x, cj, ajj, mhj))
+    qr_iter = jax.jit(lambda x: Z.zolo_iteration(x, cj[0::2], ajj, mhj,
+                                                 mode="cholqr2"))
+    chol_iter = jax.jit(lambda x: Z.zolo_iteration(x, cj[0::2], ajj, mhj,
+                                                   mode="chol"))
 
     # combine/FormX2 in isolation: the weighted r-term sum
     t_stack = jnp.stack([a] * r)

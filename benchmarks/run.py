@@ -18,6 +18,7 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 from benchmarks import (  # noqa: E402
     accuracy,
+    comm_calibrate,
     grouped_scaling,
     iterations,
     kernels_bench,
@@ -37,6 +38,7 @@ SUITES = {
     "accuracy": accuracy.run,           # paper Figure 2
     "kernels": kernels_bench.run,       # Pallas kernel parity
     "grouped_scaling": grouped_scaling.run,  # Alg. 3 (r, sep) sweep
+    "comm_calibrate": comm_calibrate.run,  # psum cost per word
     "roofline": roofline.run,           # §Roofline summary (from dry-run)
 }
 

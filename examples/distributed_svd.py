@@ -68,6 +68,26 @@ def main():
               f"{sep_aware / r:.3e}  "
               f"(plan.flops_estimate={p.flops_estimate:.3e})")
 
+    # --- runtime conditioning: one executable for any kappa ------------
+    # l0_policy="runtime" + mesh= resolves to zolo_grouped_dynamic: the
+    # sigma_min bound is estimated sep-collectively in-graph and feeds
+    # in-graph Zolotarev coefficients, so the SAME compiled plan serves
+    # well- and ill-conditioned inputs with zero retraces.
+    mesh = zolo_group_mesh(2)
+    p_dyn = S.plan(S.SvdConfig(l0_policy="runtime"), a.shape, a.dtype,
+                   mesh=mesh)
+    print(f"\nruntime-kappa plan: method={p_dyn.method} r={p_dyn.r} "
+          f"sep={p_dyn.sep}")
+    for kap in (1e2, 1e8):
+        u2, _ = np.linalg.qr(rng.standard_normal((m, n)))
+        v2, _ = np.linalg.qr(rng.standard_normal((n, n)))
+        a2 = jnp.asarray(u2 @ np.diag(np.geomspace(1, 1 / kap, n)) @ v2.T)
+        t0 = S.trace_count()
+        q, _, info = p_dyn.polar(a2, want_h=False)
+        print(f"  kappa={kap:.0e}: orth={float(C.orthogonality(q)):.2e}  "
+              f"iters={int(info.iterations)}  "
+              f"retraces={S.trace_count() - t0}")
+
 
 if __name__ == "__main__":
     main()

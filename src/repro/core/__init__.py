@@ -53,9 +53,16 @@ from repro.core.zolo import (
     DEFAULT_OPS,
     ZoloOps,
     polar_canonical,
+    run_dynamic,
+    run_schedule,
+    zolo_iteration,
     zolo_pd,
     zolo_pd_static,
 )
-from repro.core.zolo_pallas import pallas_zolo_ops, zolo_pd_pallas
+from repro.core.zolo_pallas import (
+    pallas_zolo_ops,
+    zolo_pd_pallas,
+    zolo_pd_pallas_dynamic,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

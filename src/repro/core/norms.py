@@ -51,7 +51,7 @@ def sigma_max_power(a, iters: int = 10, key=None):
     return jnp.linalg.norm(jnp.einsum("...mn,...n->...m", a, v), axis=-1)
 
 
-def sigma_min_lower(x, iters: int = 8, safety: float = 0.5):
+def sigma_min_lower(x, iters: int = 8, safety: float = 0.5, *, gram=None):
     """Deflated estimate of sigma_min(X) for X with sigma_max <= ~1.
 
     Inverse power iteration on G = X^T X + delta I via one Cholesky,
@@ -63,13 +63,26 @@ def sigma_min_lower(x, iters: int = 8, safety: float = 0.5):
     otherwise push the resolution floor to sqrt(n * eps_bf16) ~ 0.5 —
     an *over*-estimate of sigma_min, invalidating the Zolotarev interval
     it feeds.  Returns the promoted dtype (f32 for bf16/f16 inputs).
+
+    ``gram`` swaps the Gram product for an injectable implementation
+    with the :class:`repro.core.zolo.ZoloOps` ``gram(x)`` contract
+    (f32-or-better accumulation).  This is how the grouped dynamic
+    driver estimates the bound *sep-collectively in-graph*: ``x`` is
+    then each device's (m/sep, n) row block, the collective ``gram``
+    psums the partial product to the global (n, n) Gram, and everything
+    after it (the n x n Cholesky and the length-n inverse-power
+    iteration) is replicated per device — exactly the CholeskyQR
+    distribution structure of the iteration itself.
     """
     n = x.shape[-1]
     dtype = jnp.promote_types(x.dtype, jnp.float32)
     eps = jnp.finfo(dtype).eps
     delta = n * eps
-    g = jnp.einsum("...mk,...mn->...kn", x, x,
-                   preferred_element_type=dtype)
+    if gram is None:
+        g = jnp.einsum("...mk,...mn->...kn", x, x,
+                       preferred_element_type=dtype)
+    else:
+        g = gram(x).astype(dtype)
     g = g + delta * jnp.eye(n, dtype=dtype)
     l = jnp.linalg.cholesky(g)
 

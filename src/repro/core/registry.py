@@ -4,12 +4,29 @@
 one code path from ``plan(...)`` (and the thin back-compat wrappers
 ``polar_decompose`` / ``polar_svd``) down to a backend, and a new solver
 (a Pallas kernel, a distributed variant, a debugging oracle) plugs in
-with a decorator instead of another ``elif``.  ``zolo_pallas``
-(:mod:`repro.core.zolo_pallas`) is the template for kernel-backed
-backends: inject a :class:`repro.core.zolo.ZoloOps` bundle into the
-shared driver, register the result with a ``flops_fn`` that reflects
-where the kernels actually run fast (compiled on TPU; Pallas interpret
-mode — and a cost penalty — elsewhere):
+with a decorator instead of another ``elif``.
+
+The Zolo family here is ONE iteration engine (:mod:`repro.core.zolo`)
+bound along two orthogonal axes, and that (schedule source x ops
+bundle) pairing is the template every new backend should follow:
+
+* **schedule source** — ``run_schedule`` (trace-time precomputed
+  coefficient list, unrolled; bound by the spec's ``plan_fn``) or
+  ``run_dynamic`` (in-graph coefficients from the running lower bound,
+  one executable for any conditioning; ``dynamic=True``).
+* **:class:`repro.core.zolo.ZoloOps` bundle** — where the compute runs:
+  default jnp, the fused Pallas kernels
+  (``zolo_pallas`` / ``zolo_pallas_dynamic``,
+  :mod:`repro.core.zolo_pallas`), or the sep-/zolo-collective
+  distributed ops (``zolo_grouped`` / ``zolo_grouped_dynamic``,
+  :mod:`repro.dist.grouped_ops`; ``supports_grouped=True``).
+
+So a kernel backend injects an ops bundle into the shared engine and
+registers the binding with a ``flops_fn`` that reflects where the
+kernels actually run fast (compiled on TPU; Pallas interpret mode — and
+a cost penalty — elsewhere), and a distributed backend composes
+collective ops under a ``shard_map`` layout — neither writes a new
+iteration loop:
 
     @register_polar("my_solver")
     def my_solver(a, **kw):
@@ -34,10 +51,20 @@ Plan-time contract (consumed by :mod:`repro.solver`):
   the true per-device cost; ``dtype`` is the plan's input dtype, so a
   backend whose cost (or fitness) depends on precision can penalize
   itself — e.g. ``zolo_pallas`` accumulates in f32 and prices itself
-  out of f64 auto-selection.  ``SvdConfig(method="auto")`` scores every
+  out of f64 auto-selection.  When the caller supplies a measured psum
+  calibration (``SvdConfig.extra["comm_flops_per_word"]``, produced by
+  ``benchmarks/comm_calibrate.py``) the planner passes it as an
+  additional ``comm_flops_per_word=`` keyword — a grouped cost model
+  should accept and apply it (it is a scoring knob only, never a
+  backend kwarg).  ``SvdConfig(method="auto")`` scores every
   capability-matching backend with this hook (grouped mode divides by r
   — the per-group critical path) and picks the cheapest; specs without
-  a ``flops_fn`` rank last.
+  a ``flops_fn`` rank last.  A dynamic backend should fold the price of
+  "runtime" into its model (e.g. ``zolo_grouped_dynamic`` charges the
+  in-graph conditioning estimate plus one safety iteration), so auto
+  prefers a static schedule whenever l0 is already known and
+  ``l0_policy="runtime"`` plans — where only dynamic backends are
+  eligible — rank honestly among themselves.
 * ``plan_fn(res) -> dict`` — called once at plan time with the resolved
   :class:`repro.solver.PlanResolution` (m, n, mode, r, l0, kappa,
   max_iters, qr_mode, qr_iters, nb); returns the *static* backend kwargs

@@ -56,37 +56,83 @@ def _grouped_zolo_adapter(a, *, mesh, l0=None, r=None, want_h: bool = False,
     return q, h, info
 
 
+def _grouped_zolo_dynamic_adapter(a, *, mesh, want_h: bool = False,
+                                  hermitian_source=None, **kw):
+    """(q, h, info) contract over the runtime-conditioning Algorithm-3
+    driver: the sigma_min bound is estimated sep-collectively in-graph
+    and feeds in-graph Zolotarev coefficients, so one compiled
+    executable serves any conditioning on the (r, sep) mesh."""
+    from repro.dist import grouped as _grouped
+
+    q, info = _grouped.grouped_zolo_pd_dynamic(a, mesh=mesh,
+                                               return_info=True, **kw)
+    src = a if hermitian_source is None else hermitian_source
+    h = _qdwh.form_h(q, src) if want_h else None
+    return q, h, info
+
+
 # --- plan-time cost models (flops_fn) ---------------------------------------
 # The Zolotarev models are seeded from repro.dist.grouped's flop
 # accounting (lazy import: core must not depend on repro.dist at import).
 
 
-def _zolo_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1):
+def _zolo_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1,
+                comm_flops_per_word=None):
     from repro.dist.grouped import grouped_iteration_flops
 
     iters = _coeffs.zolo_iter_count(float(kappa), int(r))
     # single-address-space execution shares the Gram product across the r
     # terms; grouped (Alg. 3) execution recomputes it per group, with the
-    # per-group work distributed over the mesh's sep axis
+    # per-group work distributed over the mesh's sep axis (None comm
+    # calibration resolves to the default prior downstream)
     return grouped_iteration_flops(m, n, int(r), iters,
                                    gram_shared=not grouped,
-                                   sep=int(sep) if grouped else 1)
+                                   sep=int(sep) if grouped else 1,
+                                   comm_flops_per_word=comm_flops_per_word)
 
 
-def _zolo_pallas_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1):
-    """Cost model for the Pallas-kernel Zolo backend.
+def _zolo_grouped_dynamic_flops(m, n, *, r, kappa, grouped=False,
+                                dtype=None, sep=1,
+                                comm_flops_per_word=None):
+    """Cost model for the runtime-conditioning grouped backend.
 
-    Same arithmetic as ``zolo_static``, but the fused kernels cut HBM
-    traffic (the +cI and the r-term combine stop being separate full-
-    array passes), modeled as a small discount so ``method="auto"``
-    prefers the kernel path on TPU at equal flops.  Two penalties keep
-    auto-selection honest: off-TPU the kernels run in Pallas interpret
-    mode (the kernel body executes in Python), and the kernels
-    accumulate in f32, so an f64 plan would silently lose the precision
-    the caller asked for — in both cases the backend stays scoreable
-    (and explicitly selectable) but never wins ``method="auto"``.
+    Same iteration arithmetic as the static grouped schedule, plus what
+    "dynamic" actually buys and costs: the sep-collective in-graph
+    conditioning estimate (one distributed Gram + the replicated n^3/3
+    Cholesky and ~8 O(n^2) inverse-power solves) and one extra safety
+    iteration (the deflated runtime bound under-estimates sigma_min by
+    its 0.5 safety factor, which at Zolotarev rates costs at most one
+    more map).  The margin keeps ``method="auto"`` on the static
+    schedule whenever l0 is already known at plan time, while
+    ``l0_policy="runtime"`` plans — where static backends are not
+    eligible — score the dynamic backends honestly against each other.
     """
-    base = _zolo_flops(m, n, r=r, kappa=kappa, grouped=grouped, sep=sep)
+    sep_eff = int(sep) if grouped else 1
+    iters = _coeffs.zolo_iter_count(float(kappa), int(r)) + 1
+    from repro.dist.grouped import grouped_iteration_flops
+
+    base = grouped_iteration_flops(m, n, int(r), iters,
+                                   gram_shared=not grouped, sep=sep_eff,
+                                   comm_flops_per_word=comm_flops_per_word)
+    estimate = 2.0 * m * n * n / sep_eff + n ** 3 / 3.0 + 8 * 2.0 * n * n
+    # the estimate runs once but every group pays it (replicated over
+    # "zolo"), matching the summed-over-groups basis of the base model
+    return base + (int(r) if grouped else 1) * estimate
+
+
+def _pallas_penalty(base, dtype):
+    """The one place the Pallas kernel pricing policy lives.
+
+    Two penalties keep auto-selection honest: off-TPU the kernels run
+    in Pallas interpret mode (the kernel body executes in Python), and
+    the kernels accumulate in f32, so an f64 plan would silently lose
+    the precision the caller asked for — in both cases the backend
+    stays scoreable (and explicitly selectable) but never wins
+    ``method="auto"``.  On TPU at the requested precision the fused
+    kernels cut HBM traffic (the +cI and the r-term combine stop being
+    separate full-array passes), modeled as a small discount so auto
+    prefers the kernel path at equal flops.
+    """
     penalty = 1.0
     if jax.default_backend() != "tpu":
         penalty *= 1e3  # interpret mode
@@ -97,14 +143,42 @@ def _zolo_pallas_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1):
     return base * penalty
 
 
-def _qdwh_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1):
+def _zolo_pallas_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1,
+                       comm_flops_per_word=None):
+    """``zolo_static`` arithmetic under the Pallas pricing policy."""
+    return _pallas_penalty(
+        _zolo_flops(m, n, r=r, kappa=kappa, grouped=grouped, sep=sep,
+                    comm_flops_per_word=comm_flops_per_word), dtype)
+
+
+def _zolo_pallas_dynamic_flops(m, n, *, r, kappa, grouped=False,
+                               dtype=None, sep=1,
+                               comm_flops_per_word=None):
+    """``zolo``'s arithmetic under the Pallas pricing policy.
+
+    Deliberately NOT the grouped-dynamic model: in the mode='dynamic'
+    candidate pool every backend estimates its bound at runtime, so the
+    estimate/safety margin would cancel — sharing ``zolo``'s base keeps
+    the kernel-vs-XLA comparison apples-to-apples (on TPU at f32 the
+    kernel loop wins by its fused-pass discount, exactly like
+    ``zolo_pallas`` vs ``zolo_static``; off-TPU/f64 the penalties keep
+    auto away).  The margin lives only where static and dynamic compete
+    in one pool: the grouped candidates."""
+    return _pallas_penalty(
+        _zolo_flops(m, n, r=r, kappa=kappa, grouped=grouped, sep=sep,
+                    comm_flops_per_word=comm_flops_per_word), dtype)
+
+
+def _qdwh_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1,
+                comm_flops_per_word=None):
     iters = _coeffs.qdwh_iter_count(float(kappa))
     # per iteration: Gram product + n^3/3 Cholesky + two solves (the QR
     # iterations cost more, but only the leading one or two use QR)
     return iters * (2.0 * m * n * n + n ** 3 / 3.0 + 2.0 * m * n * n)
 
 
-def _newton_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1):
+def _newton_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1,
+                  comm_flops_per_word=None):
     if m != n:
         return float("inf")  # scaled Newton needs a square nonsingular A
     # explicit pivoted-LU inverse (~2 n^3) per iteration, ~9 iterations
@@ -142,6 +216,12 @@ def _qdwh_static_planfn(res):
 
 
 def _zolo_dynamic_planfn(res):
+    """Shared by every dynamic Zolo binding (``zolo``,
+    ``zolo_pallas_dynamic``, ``zolo_grouped_dynamic``): an explicit l0
+    (or plan-time estimate) short-circuits the in-graph bound, and the
+    config's ``qr_mode`` knob selects the peeled first iteration (the
+    drivers' ``first_mode``).  For the grouped binding r is additionally
+    pinned by the mesh's "zolo" axis."""
     kw = {}
     if res.r is not None:
         kw["r"] = res.r
@@ -149,6 +229,8 @@ def _zolo_dynamic_planfn(res):
         kw["l"] = res.l0
     if res.max_iters is not None:
         kw["max_iters"] = res.max_iters
+    if res.qr_mode is not None:
+        kw["first_mode"] = res.qr_mode
     return kw
 
 
@@ -179,12 +261,31 @@ register_polar("zolo_grouped", supports_grouped=True, requires_mesh=True,
                flops_fn=_zolo_flops, plan_fn=_zolo_static_planfn,
                description="paper Alg. 3: one Zolotarev term per group")(
     _grouped_zolo_adapter)
+register_polar("zolo_grouped_dynamic", dynamic=True, supports_grouped=True,
+               requires_mesh=True,
+               grouped_fn=_grouped_zolo_dynamic_adapter,
+               flops_fn=_zolo_grouped_dynamic_flops,
+               plan_fn=_zolo_dynamic_planfn,
+               description="paper Alg. 3 with runtime conditioning: "
+                           "sep-collective in-graph sigma_min bound "
+                           "feeding in-graph Zolotarev coefficients — "
+                           "one executable for any kappa on the "
+                           "(r, sep) mesh")(
+    _grouped_zolo_dynamic_adapter)
 register_polar("zolo_pallas",
                flops_fn=_zolo_pallas_flops, plan_fn=_zolo_static_planfn,
                description="Pallas kernel-backed trace-time Zolo-PD "
                            "(fused Gram + r-term combine; compiled on "
                            "TPU, interpret mode elsewhere)")(
     _zolo_pallas.zolo_pd_pallas)
+register_polar("zolo_pallas_dynamic", dynamic=True,
+               flops_fn=_zolo_pallas_dynamic_flops,
+               plan_fn=_zolo_dynamic_planfn,
+               description="Pallas kernel-backed dynamic Zolo-PD "
+                           "(in-graph coefficients; the kernel hot "
+                           "loops inside the while_loop — compiled on "
+                           "TPU, interpret mode elsewhere)")(
+    _zolo_pallas.zolo_pd_pallas_dynamic)
 register_polar("qdwh", dynamic=True,
                flops_fn=_qdwh_flops, plan_fn=_qdwh_dynamic_planfn,
                description="dynamic QDWH-PD baseline")(_qdwh.qdwh_pd)

@@ -15,17 +15,44 @@ Paper Algorithm 1 / Algorithm 3, adapted to TPU per DESIGN.md §3:
   (:mod:`repro.core.structured_qr`, MPDGEQRF/MPDORGQR analogue) or the
   TPU-native shifted CholeskyQR2 — selected by ``qr_mode``.
 
-Drivers:
+One engine, two orthogonal choices
+----------------------------------
 
-* :func:`zolo_pd`        — dynamic (runtime ``l``; ``lax.while_loop``,
-                           in-graph Zolotarev coefficients via AGM/Landen).
-* :func:`zolo_pd_static` — trace-time schedule, fully unrolled; used by
-                           the ZoloMuon optimizer and dry-runs.
+Every Zolo-PD backend in this repo is the SAME iteration, specialized
+along two independent axes:
+
+* **schedule source** — where the per-iteration coefficients come from:
+  :func:`run_schedule` (a trace-time precomputed
+  :func:`repro.core.coeffs.zolo_schedule_np` list, fully unrolled) or
+  :func:`run_dynamic` (in-graph coefficients from the running lower
+  bound ``l`` inside a ``lax.while_loop``, with the peeled
+  stability-regime first iteration).
+* **:class:`ZoloOps` execution bundle** — where the compute runs: the
+  default jnp/einsum ops, the fused Pallas kernels
+  (:func:`repro.core.zolo_pallas.pallas_zolo_ops`), or the
+  sep-/zolo-collective distributed ops
+  (:mod:`repro.dist.grouped_ops`).
+
+Both loops share :func:`zolo_iteration` — the ONE iteration body.  The
+public drivers are thin bindings of a (schedule source, ops bundle)
+pair:
+
+======================  ===============  ==========================
+driver                  schedule source  ops bundle
+======================  ===============  ==========================
+``zolo_pd``             dynamic          any (default jnp)
+``zolo_pd_static``      static           any (default jnp)
+``zolo_pd_pallas``      static           ``pallas_zolo_ops``
+``zolo_pd_pallas_dynamic``  dynamic      ``pallas_zolo_ops``
+``grouped_zolo_pd_static``  static       sep/zolo-collective
+``grouped_zolo_pd_dynamic`` dynamic      sep/zolo-collective
+======================  ===============  ==========================
+
+A new backend is a new pair, never a fifth loop.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -54,15 +81,21 @@ def _polar_update(x, t, a, mhat):
     return mhat.astype(x.dtype) * (x + s)
 
 
+def _coeff_select_all(c_odd, a):
+    """Default coefficient selector: this executor evaluates all r terms."""
+    return c_odd, a
+
+
 class ZoloOps(NamedTuple):
     """Injectable compute ops for the Zolotarev iteration hot spots.
 
-    The iteration bodies below route their hot loops through this
-    bundle, so a backend can swap the default jnp/einsum path for fused
-    kernels (``repro.core.zolo_pallas`` builds one on the Pallas kernels
-    in :mod:`repro.kernels`) or for sep-collective distributed versions
+    The engine below routes its hot loops through this bundle, so a
+    backend can swap the default jnp/einsum path for fused kernels
+    (``repro.core.zolo_pallas`` builds one on the Pallas kernels in
+    :mod:`repro.kernels`) or for collective distributed versions
     (``repro.dist.grouped_ops`` all-reduces partial Grams over the
-    intra-group "sep" mesh axis) without touching the driver logic.
+    intra-group "sep" mesh axis and fuses the r-term combine into the
+    "zolo" psum) without touching the driver logic.
 
     * ``gram(x, c=0.0)``          -> X^T X + c I, f32-or-better
       accumulation (callers cast the result to the working dtype).
@@ -76,12 +109,28 @@ class ZoloOps(NamedTuple):
       bundles point it at the same implementation as ``gram``.
     * ``polar_update(x, t, a, mhat)`` -> mhat * (X + sum_j a[j] T[j])
       with ``t`` the stacked (r, m, n) terms — the iteration combine
-      (paper's DGSUM2D role).
+      (paper's DGSUM2D role).  A grouped bundle contributes
+      ``mhat * (xw * X + a * T)`` with ``xw`` one-hot over groups and
+      psums over "zolo" so the collective output IS the next iterate.
+    * ``coeff_select(c_odd, a)``  -> the (c_odd, a) slice THIS executor
+      evaluates.  The dynamic engine computes all r in-graph
+      coefficients on every device and selects through this hook; the
+      default keeps all r (single-address-space batched terms), a
+      grouped bundle takes its own group's length-1 slice via
+      ``axis_index("zolo")``.  (Static schedules select by data layout
+      instead — the shard_map in_specs split the coefficient arrays —
+      so :func:`run_schedule` never calls this.)
+    * ``fnorm(x)``                -> global Frobenius norm of the
+      (possibly row-distributed) iterate, for the dynamic engine's
+      residual stopping rule; a sep-distributed bundle psums the local
+      sum of squares.
     """
 
     gram: Callable = _gram
     polar_update: Callable = _polar_update
     gram_local: Callable = _gram
+    coeff_select: Callable = _coeff_select_all
+    fnorm: Callable = _norms.frobenius
 
 
 DEFAULT_OPS = ZoloOps()
@@ -110,18 +159,10 @@ def term_sum_chol(x, c_odd, a, gram=None, *, ops: ZoloOps = DEFAULT_OPS):
     """sum_j a_j X (X^T X + c_{2j-1} I)^{-1} over the given (possibly
     partial) odd-coefficient slice — the Cholesky-variant Zolotarev term.
 
-    Shared by the single-address-space batched drivers below and by the
-    per-group bodies of :mod:`repro.dist.grouped` (where each process
-    group holds a length-1 slice of ``c_odd`` / ``a``)."""
+    Kept for callers wanting the bare term; the drivers go through
+    :func:`zolo_iteration`."""
     w = _chol_terms(x, c_odd, gram=gram, ops=ops)
     return jnp.einsum("j,jnm->mn", a.astype(x.dtype), w)
-
-
-def _zolo_iter_chol(x, c, a, mhat, *, ops: ZoloOps = DEFAULT_OPS):
-    """One Cholesky-variant Zolotarev iteration (Alg. 1 step 4d)."""
-    w = _chol_terms(x, c[0::2], ops=ops)  # (r, ..., n, m)
-    t = jnp.swapaxes(w, -1, -2)           # stacked terms (r, ..., m, n)
-    return ops.polar_update(x, t, a, mhat)
 
 
 def term_sum_cholqr2(x, c_odd, a, *, ops: ZoloOps = DEFAULT_OPS):
@@ -131,8 +172,7 @@ def term_sum_cholqr2(x, c_odd, a, *, ops: ZoloOps = DEFAULT_OPS):
     Q1_j = X R_j^{-1}, Q2_j = sqrt(c_j) R_j^{-1} with R_j from a two-pass
     shifted Cholesky QR of [X; sqrt(c_j) I].  Explicit Q (paper's MPDORGQR
     role) keeps the term stable for much smaller c_j than a single
-    Cholesky.  Shared with :mod:`repro.dist.grouped` like
-    :func:`term_sum_chol`.
+    Cholesky.
 
     Both Gram passes route through ``ops``: the first (and the Q1 part
     of the second) uses ``ops.gram`` — Q1 shares X's row distribution —
@@ -167,27 +207,16 @@ def term_sum_cholqr2(x, c_odd, a, *, ops: ZoloOps = DEFAULT_OPS):
                       q1, q2)
 
 
-def _zolo_iter_cholqr2(x, c, a, mhat, *, ops: ZoloOps = DEFAULT_OPS):
-    """One shifted-CholeskyQR2 Zolotarev iteration (stable first iter).
-
-    ``term_sum_cholqr2`` folds the a_j weights into its sum, so the
-    combine sees one pre-summed term with unit weight."""
-    t = term_sum_cholqr2(x, c[0::2], a, ops=ops)
-    one = jnp.ones((1,), jnp.promote_types(x.dtype, jnp.float32))
-    return ops.polar_update(x, t[None], one, mhat)
-
-
 def term_sum_householder(x, c_odd, a, block: int = 32, *,
                          ops: ZoloOps = DEFAULT_OPS):
     """sum_j (a_j / sqrt(c_j)) Q1_j Q2_j^T via blocked *structured*
     Householder QR of [X; sqrt(c_j) I] (MPDGEQRF/MPDORGQR analogue, §3.1)
-    over the given odd-coefficient slice.  Shared with
-    :mod:`repro.dist.grouped` like :func:`term_sum_chol`.
+    over the given odd-coefficient slice.
 
     ``ops`` is accepted for term-signature uniformity only: the blocked
     Householder QR has no kernel or sep-distributed implementation, so
     this term requires the *full* (undistributed) ``x`` — the grouped
-    driver rejects qr_mode="householder" on a sep>1 mesh."""
+    drivers reject it on a sep>1 mesh."""
     dtype = x.dtype
     terms = []
     for j in range(c_odd.shape[0]):
@@ -198,28 +227,155 @@ def term_sum_householder(x, c_odd, a, block: int = 32, *,
     return sum(terms)
 
 
-def _zolo_iter_householder(x, c, a, mhat, block: int = 32, *,
-                           ops: ZoloOps = DEFAULT_OPS):
-    """Paper-faithful first iteration: structured Householder QR terms."""
-    t = term_sum_householder(x, c[0::2], a, block=block)
+ITER_MODES = ("chol", "cholqr2", "householder")
+
+
+def _validate_iter_mode(name: str, value: str, extra=()) -> None:
+    """ValueError (not a downstream failure) for an unknown iteration
+    mode, listing the valid choices."""
+    valid = sorted(ITER_MODES) + list(extra)
+    if value not in valid:
+        raise ValueError(f"unknown {name}: {value!r} (one of {valid})")
+
+
+def zolo_iteration(x, c_odd, a, mhat, *, mode: str = "chol",
+                   ops: ZoloOps = DEFAULT_OPS, hh_block: int = 32):
+    """THE Zolotarev iteration body (Alg. 1 step 4 / Alg. 3 step 4).
+
+    X -> mhat * (X + sum_j a_j T_j(c_{2j-1})) with the shifted
+    factorization for T_j picked by ``mode``:
+
+    * ``"chol"``        — shared-Gram Cholesky (eq. 4 analogue; the
+      steady-state term once the interval has left the stiff regime).
+    * ``"cholqr2"``     — shifted CholeskyQR2 (TPU-native stable
+      first-iteration term).
+    * ``"householder"`` — blocked structured Householder QR (paper
+      §3.1; paper-faithful stable term, not row-distributable).
+
+    ``c_odd``/``a`` hold the odd shifts c_{2j-1} and weights a_j of the
+    terms THIS executor evaluates — all r in the single-address-space
+    drivers, this group's length-1 slice under ``repro.dist.grouped``.
+    Every schedule source (static or dynamic) and every ops bundle
+    (jnp, Pallas, sep-collective) runs through this one body: there is
+    no forked per-driver iteration math anywhere else.
+    """
+    if mode == "chol":
+        w = _chol_terms(x, c_odd, ops=ops)    # (r, ..., n, m)
+        t = jnp.swapaxes(w, -1, -2)           # stacked terms (r, ..., m, n)
+        return ops.polar_update(x, t, a, mhat)
+    if mode == "cholqr2":
+        # the QR-form terms fold the a_j weights into their sum, so the
+        # combine sees one pre-summed term with unit weight
+        t = term_sum_cholqr2(x, c_odd, a, ops=ops)
+    elif mode == "householder":
+        t = term_sum_householder(x, c_odd, a, block=hh_block, ops=ops)
+    else:
+        _validate_iter_mode("mode", mode)
     one = jnp.ones((1,), jnp.promote_types(x.dtype, jnp.float32))
     return ops.polar_update(x, t[None], one, mhat)
 
 
-_ITER_FNS = {
-    "chol": _zolo_iter_chol,
-    "cholqr2": _zolo_iter_cholqr2,
-    "householder": _zolo_iter_householder,
-}
+def run_schedule(x, c_odd, a_wts, mhats, *, qr_mode: str = "cholqr2",
+                 qr_iters: int = 1, ops: ZoloOps = DEFAULT_OPS,
+                 hh_block: int = 32):
+    """THE static schedule source: the trace-time coefficient schedule,
+    fully unrolled over :func:`zolo_iteration`.
+
+    ``c_odd`` (iters, r_local) / ``a_wts`` (iters, r_local) /
+    ``mhats`` (iters,) are the stacked per-iteration coefficients —
+    r_local = r for the batched single-address-space drivers, 1 for a
+    grouped shard_map body whose in_specs split the arrays over "zolo".
+    The first ``qr_iters`` iterations use the stable-regime ``qr_mode``
+    term; the rest use the shared-Gram Cholesky term.
+    """
+    for i in range(c_odd.shape[0]):
+        mode = qr_mode if i < qr_iters else "chol"
+        x = zolo_iteration(x, c_odd[i], a_wts[i], mhats[i], mode=mode,
+                           ops=ops, hh_block=hh_block)
+    return x
 
 
-def _validate_iter_mode(name: str, value: str, extra=()) -> None:
-    """ValueError (not a bare KeyError from ``_ITER_FNS``) for an unknown
-    iteration mode, listing the valid choices — matching the ``qr_mode``
-    validation in :mod:`repro.dist.grouped`."""
-    valid = sorted(_ITER_FNS) + list(extra)
-    if value not in valid:
-        raise ValueError(f"unknown {name}: {value!r} (one of {valid})")
+def run_dynamic(x0, l0, r: int, *, eps: float, max_iters: int = 8,
+                first_mode: str = "auto", hh_block: int = 32,
+                ops: ZoloOps = DEFAULT_OPS, allow_householder: bool = True):
+    """THE dynamic schedule source: in-graph Zolotarev coefficients from
+    the running lower bound, so one compiled executable serves any
+    conditioning.
+
+    The *first* iteration is peeled out of the while-loop and selects
+    its factorization by stability regime (the paper's QR-first policy):
+
+      l <  ~10 sqrt(eps)  -> structured Householder QR  (paper §3.1)
+      l <  0.05           -> shifted CholeskyQR2         (TPU fast path)
+      else                -> shared-Gram Cholesky        (eq. 4 analogue)
+
+    ``first_mode`` in {"auto", "householder", "cholqr2", "chol"} —
+    "auto" switches at runtime via lax.switch; a static choice compiles
+    only one branch.  ``allow_householder=False`` substitutes the
+    shifted CholeskyQR2 term in the extreme regime (a row-distributed
+    ops bundle cannot run the structured Householder QR).  All remaining
+    iterations use the shared-Gram Cholesky form (after one Zolotarev
+    map the interval is always in Cholesky range).
+
+    The stopping rule is the paper's residual criterion (Alg. 1 step 4e)
+    only: an interval-bound certificate (stop when l >= 1 - O(eps)) is
+    unsound in finite precision at extreme kappa — the fp iterate lags
+    the exact-arithmetic l recursion (measured: orth 4e-5 where the
+    certificate claimed convergence at kappa 1e16).  The residual rule
+    reproduces the paper's *measured* Tables 5/10 (theory + <= 1).
+
+    Every coefficient set passes through ``ops.coeff_select`` (a grouped
+    bundle takes its group's slice) and residual norms through
+    ``ops.fnorm`` (a distributed bundle all-reduces), so the SAME loop
+    runs single-device, kernel-backed, and grouped.  Returns
+    ``(x, l_final, iterations, residual)``.
+    """
+    dtype = x0.dtype
+    tol = eps ** (1.0 / (2 * r + 1))
+    hh_thresh = 10.0 * eps ** 0.5
+    qr_thresh = 0.05
+
+    # --- peeled first iteration -------------------------------------------
+    c0, a0, m0 = _coeffs.zolo_coeffs(l0, r)
+    c0_odd = c0[0::2]
+
+    def first(x_, mode):
+        c_sel, a_sel = ops.coeff_select(c0_odd, a0)
+        return zolo_iteration(x_, c_sel, a_sel, m0, mode=mode, ops=ops,
+                              hh_block=hh_block)
+
+    hh_mode = "householder" if allow_householder else "cholqr2"
+    if first_mode == "auto":
+        branch = (jnp.int32(0) + (l0 >= hh_thresh).astype(jnp.int32)
+                  + (l0 >= qr_thresh).astype(jnp.int32))
+        x1 = jax.lax.switch(
+            branch,
+            [lambda x_: first(x_, hh_mode),
+             lambda x_: first(x_, "cholqr2"),
+             lambda x_: first(x_, "chol")],
+            x0)
+    else:
+        x1 = first(x0, first_mode)
+    res1 = ops.fnorm(x1 - x0) / jnp.maximum(
+        ops.fnorm(x1), jnp.finfo(dtype).tiny)
+    l1 = jnp.clip(_coeffs.zolo_l_update(l0, c0, m0), 0.0, 1.0 - eps)
+
+    # --- remaining iterations: shared-Gram Cholesky ------------------------
+    def cond(state):
+        _, _, k, res = state
+        return jnp.logical_and(k < max_iters, res > tol)
+
+    def body(state):
+        x, l, k, _ = state
+        c, av, mh = _coeffs.zolo_coeffs(l, r)
+        c_sel, a_sel = ops.coeff_select(c[0::2], av)
+        x_new = zolo_iteration(x, c_sel, a_sel, mh, mode="chol", ops=ops)
+        res = ops.fnorm(x_new - x) / jnp.maximum(
+            ops.fnorm(x_new), jnp.finfo(dtype).tiny)
+        l_new = jnp.clip(_coeffs.zolo_l_update(l, c, mh), 0.0, 1.0 - eps)
+        return x_new, l_new, k + 1, res
+
+    return jax.lax.while_loop(cond, body, (x1, l1, jnp.int32(1), res1))
 
 
 def zolo_pd_static(a, *, l0: Optional[float] = None,
@@ -227,7 +383,8 @@ def zolo_pd_static(a, *, l0: Optional[float] = None,
                    want_h: bool = False, qr_mode: str = "cholqr2",
                    qr_iters: int = 1, hermitian_source=None,
                    schedule=None, ops: Optional[ZoloOps] = None):
-    """Unrolled Zolo-PD with a trace-time coefficient schedule.
+    """Unrolled Zolo-PD with a trace-time coefficient schedule — the
+    (static schedule, ``ops``) binding of the engine.
 
     ``a`` must be pre-scaled (sigma_max <= 1) with singular values in
     [l0, 1].  The first ``qr_iters`` iterations use ``qr_mode``
@@ -235,10 +392,9 @@ def zolo_pd_static(a, *, l0: Optional[float] = None,
     Cholesky variant.  A precomputed ``schedule`` (sequence of
     :class:`repro.core.coeffs.ZoloIteration`, e.g. bound once by an
     ``SvdPlan``) takes precedence over ``l0``/``r``/``max_iters``.
-    ``ops`` swaps the iteration's compute ops (Gram product, r-term
-    combine) for an alternative :class:`ZoloOps` bundle — the hook the
-    kernel-backed ``zolo_pallas`` backend plugs into.
-    Returns (Q, H or None, PolarInfo).
+    ``ops`` swaps the iteration's compute ops for an alternative
+    :class:`ZoloOps` bundle — the hook the kernel-backed ``zolo_pallas``
+    backend plugs into.  Returns (Q, H or None, PolarInfo).
     """
     _validate_iter_mode("qr_mode", qr_mode)
     ops = DEFAULT_OPS if ops is None else ops
@@ -252,13 +408,11 @@ def zolo_pd_static(a, *, l0: Optional[float] = None,
         raise ValueError("zolo_pd_static needs l0= or a precomputed "
                          "schedule=")
     coeff_dtype = jnp.promote_types(a.dtype, jnp.float32)
-    x = a
-    for i, it in enumerate(sched):
-        c = jnp.asarray(it.c, coeff_dtype)
-        av = jnp.asarray(it.a, coeff_dtype)
-        mh = jnp.asarray(it.mhat, coeff_dtype)
-        fn = _ITER_FNS[qr_mode] if i < qr_iters else _zolo_iter_chol
-        x = fn(x, c, av, mh, ops=ops)
+    c_odd = jnp.asarray([it.c[0::2] for it in sched], coeff_dtype)
+    a_wts = jnp.asarray([it.a for it in sched], coeff_dtype)
+    mhats = jnp.asarray([it.mhat for it in sched], coeff_dtype)
+    x = run_schedule(a, c_odd, a_wts, mhats, qr_mode=qr_mode,
+                     qr_iters=qr_iters, ops=ops)
     src = a if hermitian_source is None else hermitian_source
     info = PolarInfo(iterations=jnp.int32(len(sched)),
                      residual=jnp.asarray(0.0, a.dtype),
@@ -270,26 +424,21 @@ def zolo_pd_static(a, *, l0: Optional[float] = None,
 
 def zolo_pd(a, r: int = 3, *, alpha=None, l=None, max_iters: int = 8,
             eps: Optional[float] = None, want_h: bool = True,
-            first_mode: str = "auto", hh_block: int = 32):
-    """Dynamic Zolo-PD (paper Alg. 1/3) of ``a`` with m >= n.
+            first_mode: str = "auto", hh_block: int = 32,
+            ops: Optional[ZoloOps] = None):
+    """Dynamic Zolo-PD (paper Alg. 1/3) of ``a`` with m >= n — the
+    (dynamic schedule, ``ops``) binding of the engine.
 
     ``r`` is static (it fixes array shapes); coefficients are computed
     in-graph from the running lower bound via the JAX elliptic functions,
-    so a single compiled function serves any conditioning.
-
-    The *first* iteration is peeled out of the while-loop and selects its
-    factorization by stability regime (the paper's QR-first policy):
-
-      l <  ~10 sqrt(eps)  -> structured Householder QR  (paper §3.1)
-      l <  0.05           -> shifted CholeskyQR2         (TPU fast path)
-      else                -> shared-Gram Cholesky        (eq. 4 analogue)
-
-    ``first_mode`` in {"auto", "householder", "cholqr2", "chol"} — "auto"
-    switches at runtime via lax.switch; a static choice compiles only one
-    branch.  All remaining iterations use the shared-Gram Cholesky form
-    (after one Zolotarev map the interval is always in Cholesky range).
+    so a single compiled function serves any conditioning (see
+    :func:`run_dynamic` for the first-iteration regime switch and the
+    residual stopping rule).  ``ops`` swaps the iteration's compute ops
+    for an alternative :class:`ZoloOps` bundle — the hook the
+    kernel-backed ``zolo_pallas_dynamic`` backend plugs into.
     """
     _validate_iter_mode("first_mode", first_mode, extra=("auto",))
+    ops = DEFAULT_OPS if ops is None else ops
     dtype = a.dtype
     eps = eps or float(jnp.finfo(dtype).eps)
     # alpha must be a guaranteed upper bound (paper: alpha assumed known/
@@ -301,51 +450,9 @@ def zolo_pd(a, r: int = 3, *, alpha=None, l=None, max_iters: int = 8,
     l0 = _norms.sigma_min_lower_qr(x0) if l is None else jnp.asarray(l)
     l0 = jnp.clip(l0, 4 * eps, 1.0 - eps)
     l0 = l0.astype(jnp.result_type(l0, 0.0))
-    tol = eps ** (1.0 / (2 * r + 1))
-    hh_thresh = 10.0 * eps ** 0.5
-    qr_thresh = 0.05
-
-    # --- peeled first iteration -------------------------------------------
-    c0, a0, m0 = _coeffs.zolo_coeffs(l0, r)
-    hh = functools.partial(_zolo_iter_householder, block=hh_block)
-    if first_mode == "auto":
-        branch = (jnp.int32(0) + (l0 >= hh_thresh).astype(jnp.int32)
-                  + (l0 >= qr_thresh).astype(jnp.int32))
-        x1 = jax.lax.switch(
-            branch,
-            [lambda x_: hh(x_, c0, a0, m0),
-             lambda x_: _zolo_iter_cholqr2(x_, c0, a0, m0),
-             lambda x_: _zolo_iter_chol(x_, c0, a0, m0)],
-            x0)
-    else:
-        x1 = _ITER_FNS[first_mode](x0, c0, a0, m0) if first_mode != "householder" \
-            else hh(x0, c0, a0, m0)
-    res1 = _norms.frobenius(x1 - x0) / jnp.maximum(
-        _norms.frobenius(x1), jnp.finfo(dtype).tiny)
-    l1 = jnp.clip(_coeffs.zolo_l_update(l0, c0, m0), 0.0, 1.0 - eps)
-
-    # --- remaining iterations: shared-Gram Cholesky ------------------------
-    # The stopping rule is the paper's residual criterion (Alg. 1 step 4e)
-    # only: an interval-bound certificate (stop when l >= 1 - O(eps)) is
-    # unsound in finite precision at extreme kappa — the fp iterate lags
-    # the exact-arithmetic l recursion (measured: orth 4e-5 where the
-    # certificate claimed convergence at kappa 1e16).  The residual rule
-    # reproduces the paper's *measured* Tables 5/10 (theory + <= 1).
-    def cond(state):
-        _, _, k, res = state
-        return jnp.logical_and(k < max_iters, res > tol)
-
-    def body(state):
-        x, l, k, _ = state
-        c, av, mh = _coeffs.zolo_coeffs(l, r)
-        x_new = _zolo_iter_chol(x, c, av, mh)
-        res = _norms.frobenius(x_new - x) / jnp.maximum(
-            _norms.frobenius(x_new), jnp.finfo(dtype).tiny)
-        l_new = jnp.clip(_coeffs.zolo_l_update(l, c, mh), 0.0, 1.0 - eps)
-        return x_new, l_new, k + 1, res
-
-    x, l_fin, k, res = jax.lax.while_loop(
-        cond, body, (x1, l1, jnp.int32(1), res1))
+    x, l_fin, k, res = run_dynamic(x0, l0, r, eps=eps, max_iters=max_iters,
+                                   first_mode=first_mode,
+                                   hh_block=hh_block, ops=ops)
     info = PolarInfo(iterations=k, residual=res, l_final=l_fin)
     if want_h:
         return x, form_h(x, a), info

@@ -1,9 +1,12 @@
-"""Kernel-backed Zolo-PD: the ``zolo_pallas`` registry backend.
+"""Kernel-backed Zolo-PD: the ``zolo_pallas`` / ``zolo_pallas_dynamic``
+registry backends.
 
-Builds the static (trace-time schedule) Zolotarev driver of
-:mod:`repro.core.zolo` on the fused Pallas kernels in
-:mod:`repro.kernels` by injecting a :class:`repro.core.zolo.ZoloOps`
-bundle whose two hot loops are hand-tiled TPU kernels:
+Binds both schedule sources of the one Zolotarev engine in
+:mod:`repro.core.zolo` — the static trace-time schedule
+(:func:`zolo_pd_pallas`) and the dynamic in-graph-coefficient loop
+(:func:`zolo_pd_pallas_dynamic`) — to a
+:class:`repro.core.zolo.ZoloOps` bundle whose two hot loops are
+hand-tiled TPU kernels:
 
 * ``repro.kernels.ops.gram``         — fused shifted Gram
   ``G = X^T X + c I`` (MXU tiles, f32 accumulation; Alg. 1 step 4d /
@@ -106,3 +109,28 @@ def zolo_pd_pallas(a, *, l0: Optional[float] = None,
         a, l0=l0, r=r, max_iters=max_iters, want_h=want_h,
         qr_mode=qr_mode, qr_iters=qr_iters,
         hermitian_source=hermitian_source, schedule=schedule, ops=ops)
+
+
+def zolo_pd_pallas_dynamic(a, r: int = 3, *, alpha=None, l=None,
+                           max_iters: int = 8, eps=None,
+                           want_h: bool = True, first_mode: str = "auto",
+                           hh_block: int = 32, bn: int = 256,
+                           bk: int = 512, bm: int = 256,
+                           use_pallas: bool = True):
+    """Dynamic Zolo-PD (same contract as
+    :func:`repro.core.zolo.zolo_pd`) with the iteration's Gram product
+    and r-term combine running on the Pallas kernels — the (dynamic
+    schedule, Pallas ops) binding of the engine.
+
+    Coefficients are computed in-graph from the running lower bound, so
+    one compiled executable serves any conditioning while the hot loops
+    stay on the fused kernels.  The ``lax.while_loop`` body traces the
+    kernels once (no static-schedule unrolling), so the kernel count in
+    the compiled module is O(1) in the iteration count.  ``bn``/``bk``/
+    ``bm`` select kernel tile sizes (threaded from ``SvdConfig.extra``
+    by the planner).  Returns (Q, H or None, PolarInfo).
+    """
+    ops = pallas_zolo_ops(bn=bn, bk=bk, bm=bm, use_pallas=use_pallas)
+    return _zolo.zolo_pd(a, r, alpha=alpha, l=l, max_iters=max_iters,
+                         eps=eps, want_h=want_h, first_mode=first_mode,
+                         hh_block=hh_block, ops=ops)

@@ -16,10 +16,11 @@ See ``src/repro/dist/README.md`` for the Algorithm-3 -> mesh mapping.
 
 from repro.dist.grouped import (
     grouped_iteration_flops,
+    grouped_zolo_pd_dynamic,
     grouped_zolo_pd_static,
     zolo_group_mesh,
 )
-from repro.dist.grouped_ops import sep_reduce_ops
+from repro.dist.grouped_ops import sep_reduce_ops, zolo_term_group_ops
 from repro.dist.sharding import (
     REPLICATED,
     LogicalRules,
@@ -39,11 +40,13 @@ __all__ = [
     "arch_rules",
     "current_rules",
     "grouped_iteration_flops",
+    "grouped_zolo_pd_dynamic",
     "grouped_zolo_pd_static",
     "hint",
     "hint_tree",
     "logical_sharding",
     "sep_reduce_ops",
     "tree_shardings",
+    "zolo_term_group_ops",
     "zolo_group_mesh",
 ]

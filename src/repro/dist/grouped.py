@@ -14,23 +14,26 @@ Here the same two-level decomposition is a 2-D device mesh:
                             itself distributed and per-device memory for
                             the m x n iterate is O(m n / sep).
 
-``shard_map`` partitions the per-iteration coefficient arrays over
-"zolo" and the iterate over "sep".  Each group's body computes exactly
-one shifted factorization on its row blocks — the Gram product is a
-local partial product + one ``psum`` over "sep"
-(:func:`repro.dist.grouped_ops.sep_reduce_ops`; the paper's per-grid
-PDSYRK + DGSUM2D), recomputed per group as the paper's groups do (the
-single-address-space gram-*sharing* optimization lives in
-:mod:`repro.core.zolo`) — and the weighted sum of terms is one ``psum``
-over the "zolo" axis (the TOP-context DGSUM2D role).  That combine is
-fused: each group contributes ``mhat * (xw * X + a * T)`` with ``xw``
-one-hot over groups (:mod:`repro.kernels.grouped_combine`; compiled on
-TPU, jnp oracle elsewhere), so the psum output *is* the next iterate
-and no replicated post-psum epilogue pass remains.
+Both drivers here are thin ``shard_map`` bindings of the ONE iteration
+engine in :mod:`repro.core.zolo`: they lay the iterate and coefficients
+out over the mesh, compose the collective :class:`~repro.core.zolo.
+ZoloOps` bundle (``sep_reduce_ops`` for the intra-group Gram psum —
+the paper's per-grid PDSYRK + DGSUM2D — and ``zolo_term_group_ops``
+for the per-group coefficient slice + fused combine whose "zolo" psum
+output IS the next iterate), and hand off to the engine's loop.  There
+is no grouped iteration math in this module.
 
-The schedule is trace-time (:func:`repro.core.coeffs.zolo_schedule_np`),
-matching :func:`repro.core.zolo.zolo_pd_static`: first iteration via
-shifted CholeskyQR2 (the stable regime), the rest via single Cholesky.
+* :func:`grouped_zolo_pd_static` — trace-time schedule
+  (:func:`repro.core.coeffs.zolo_schedule_np`), laid out over the mesh
+  by the shard_map in_specs and run by
+  :func:`repro.core.zolo.run_schedule`.
+* :func:`grouped_zolo_pd_dynamic` — runtime conditioning: the
+  ``sigma_min`` lower bound is estimated *sep-collectively in-graph*
+  (:func:`repro.core.norms.sigma_min_lower` over the collective Gram)
+  and feeds :func:`repro.core.zolo.run_dynamic`'s in-graph Zolotarev
+  coefficients, so ONE compiled executable serves any conditioning on
+  the full (r, sep) mesh — the adaptive kappa-driven execution of the
+  ROADMAP's dynamic-grouped item.
 """
 
 from __future__ import annotations
@@ -45,6 +48,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import coeffs as _coeffs
+from repro.core import norms as _norms
 from repro.core import zolo as _zolo
 from repro.core.qdwh import PolarInfo
 from repro.dist import grouped_ops as _gops
@@ -71,11 +75,53 @@ def zolo_group_mesh(r: int, devices=None) -> Mesh:
     return Mesh(arr, ("zolo", "sep"))
 
 
-_TERM_FNS = {
-    "chol": _zolo.term_sum_chol,
-    "cholqr2": _zolo.term_sum_cholqr2,
-    "householder": _zolo.term_sum_householder,
-}
+def _mesh_layout(a, mesh: Mesh, r: Optional[int], qr_mode: str,
+                 qr_iters: int, first_iter_modes=(),
+                 mode_knob: str = "qr_mode"):
+    """Shared mesh/shape validation for both grouped drivers.
+
+    Returns (r, nsep, has_sep, m, n, m_pad, x_spec): the (r, sep)
+    factorization, and the row padding to a "sep" multiple (zero rows
+    are exact for every engine step: zero Gram contribution, zero solve
+    rows, zero stays zero through the combine — pad once outside the
+    shard_map and slice after).
+    """
+    if a.ndim != 2:
+        raise ValueError(f"grouped Zolo-PD takes one matrix; got {a.shape}")
+    if "zolo" not in mesh.axis_names:
+        raise ValueError(f"mesh has no 'zolo' axis: {mesh.axis_names}")
+    if r is None:
+        r = mesh.shape["zolo"]
+    if mesh.shape["zolo"] != r:
+        raise ValueError(
+            f"mesh 'zolo' axis has size {mesh.shape['zolo']} != r={r}")
+    _zolo._validate_iter_mode(mode_knob, qr_mode, extra=first_iter_modes)
+    has_sep = "sep" in mesh.axis_names
+    nsep = int(mesh.shape["sep"]) if has_sep else 1
+    if nsep > 1 and qr_mode == "householder" and qr_iters > 0:
+        raise ValueError(
+            f"{mode_knob}='householder' needs the full iterate on every "
+            f"device (structured Householder QR is not row-distributed); "
+            f"use a sep=1 mesh (r == ndev) or {mode_knob}='cholqr2'")
+    m, n = a.shape
+    m_pad = m + (-m) % nsep
+    x_spec = P("sep", None) if has_sep else P()
+    return r, nsep, has_sep, m, n, m_pad, x_spec
+
+
+def _group_ops(has_sep: bool, xw, combine_kernel) -> _zolo.ZoloOps:
+    """The grouped ZoloOps composition: intra-group sep collectives
+    under the inter-group term-slice + fused combine layer."""
+    base = _gops.sep_reduce_ops() if has_sep else _zolo.DEFAULT_OPS
+    return _gops.zolo_term_group_ops(base, xw=xw,
+                                     combine_kernel=combine_kernel)
+
+
+def _default_combine_kernel(dtype) -> bool:
+    # the kernel accumulates in f32: never pick it by default for
+    # wider-than-f32 inputs (the f64 parity tolerances would sink)
+    return (jax.default_backend() == "tpu"
+            and jnp.dtype(dtype).itemsize <= 4)
 
 
 def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
@@ -83,7 +129,8 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
                            qr_mode: str = "cholqr2", qr_iters: int = 1,
                            alpha=None, return_info: bool = False,
                            schedule=None, combine_kernel=None):
-    """Grouped (Alg. 3) Zolo-PD orthogonal factor of ``a`` (m >= n).
+    """Grouped (Alg. 3) Zolo-PD orthogonal factor of ``a`` (m >= n) —
+    the (static schedule, collective ops) binding of the engine.
 
     ``a`` must have singular values in [l0 * alpha, alpha] (alpha=1 when
     omitted, i.e. pre-scaled like :func:`repro.core.zolo.zolo_pd_static`).
@@ -103,27 +150,12 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
     with ``return_info=True``); form H with ``repro.core.form_h(q, a)``
     (the paper forms H the same way, after the combine).
     """
-    if a.ndim != 2:
-        raise ValueError(f"grouped Zolo-PD takes one matrix; got {a.shape}")
-    if "zolo" not in mesh.axis_names:
-        raise ValueError(f"mesh has no 'zolo' axis: {mesh.axis_names}")
     if schedule is not None and not len(schedule):
         raise ValueError("schedule= is empty: nothing to iterate")
-    if r is None:
-        r = schedule[0].r if schedule is not None else mesh.shape["zolo"]
-    if mesh.shape["zolo"] != r:
-        raise ValueError(
-            f"mesh 'zolo' axis has size {mesh.shape['zolo']} != r={r}")
-    if qr_mode not in _TERM_FNS:
-        raise ValueError(f"unknown qr_mode: {qr_mode!r} "
-                         f"(one of {sorted(_TERM_FNS)})")
-    has_sep = "sep" in mesh.axis_names
-    nsep = int(mesh.shape["sep"]) if has_sep else 1
-    if nsep > 1 and qr_mode == "householder" and qr_iters > 0:
-        raise ValueError(
-            "qr_mode='householder' needs the full iterate on every "
-            "device (structured Householder QR is not row-distributed); "
-            "use a sep=1 mesh (r == ndev) or qr_mode='cholqr2'")
+    if r is None and schedule is not None:
+        r = schedule[0].r
+    r, nsep, has_sep, m, n, m_pad, x_spec = _mesh_layout(
+        a, mesh, r, qr_mode, qr_iters)
 
     if schedule is not None:
         sched = list(schedule)
@@ -142,22 +174,10 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
     a_wts = jnp.asarray([it.a for it in sched], coeff_dtype)
     mhats = jnp.asarray([it.mhat for it in sched], coeff_dtype)
     x0 = a if alpha is None else a / jnp.asarray(alpha, a.dtype)
-
-    m, n = x0.shape
-    # Row padding to a "sep" multiple: zero rows are exact for every step
-    # (zero Gram contribution, zero solve rows, zero stays zero through
-    # the combine), so pad once outside and slice after.
-    m_pad = m + (-m) % nsep
     if m_pad != m:
         x0 = jnp.pad(x0, ((0, m_pad - m), (0, 0)))
-    x_spec = P("sep", None) if has_sep else P()
-    ops = _gops.sep_reduce_ops() if has_sep else _zolo.DEFAULT_OPS
-    one = jnp.ones((1,), coeff_dtype)
     if combine_kernel is None:
-        # the kernel accumulates in f32: never pick it by default for
-        # wider-than-f32 inputs (the f64 parity tolerances would sink)
-        combine_kernel = (jax.default_backend() == "tpu"
-                          and jnp.dtype(a.dtype).itemsize <= 4)
+        combine_kernel = _default_combine_kernel(a.dtype)
     # pallas_call has no shard_map replication rule; the psum over
     # "zolo" establishes the out_specs replication either way, so rep
     # checking is only disabled when the kernel path actually runs
@@ -179,19 +199,12 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
         assert c_grp.shape == (len(sched), 1) == a_grp.shape, \
             (c_grp.shape, "coefficients not split over 'zolo'")
         # exactly one group carries X into the combine psum (exact — no
-        # 1/r rescale rounding), every group adds its weighted term
+        # 1/r rescale rounding), every group adds its weighted term;
+        # the engine's loop does the rest through the collective bundle
         xw = (jax.lax.axis_index("zolo") == 0).astype(coeff_dtype)
-        for i in range(len(sched)):
-            term = (_TERM_FNS[qr_mode] if i < qr_iters
-                    else _zolo.term_sum_chol)
-            # unit term weight: the a_j scaling is linear, so it fuses
-            # into the combine kernel below instead of a separate pass
-            t = term(x, c_grp[i], one, ops=ops)
-            y = _fused_combine(x, t, a_grp[i], mh[i], xw,
-                               use_pallas=combine_kernel)
-            # DGSUM2D over groups; the psum result IS the next iterate
-            x = jax.lax.psum(y, "zolo")
-        return x
+        ops = _group_ops(has_sep, xw, combine_kernel)
+        return _zolo.run_schedule(x, c_grp, a_grp, mh, qr_mode=qr_mode,
+                                  qr_iters=qr_iters, ops=ops)
 
     q = run(x0, c_odd, a_wts, mhats)
     if m_pad != m:
@@ -204,18 +217,95 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
     return q
 
 
-def _fused_combine(x, t, a, mhat, xw, use_pallas=None):
-    """One group's combine contribution mhat * (xw * x + a * t) through
-    the grouped-combine kernel wrapper (jnp oracle off-TPU)."""
-    from repro.kernels import ops as _kops
+def grouped_zolo_pd_dynamic(a, *, mesh: Mesh, r: Optional[int] = None,
+                            l=None, alpha=None, max_iters: int = 8,
+                            first_mode: str = "auto",
+                            eps: Optional[float] = None,
+                            est_iters: int = 8,
+                            return_info: bool = False,
+                            combine_kernel=None):
+    """Grouped (Alg. 3) Zolo-PD with *runtime* conditioning — the
+    (dynamic schedule, collective ops) binding of the engine.
 
-    return _kops.grouped_combine(x, t[None], a, mhat, xw,
-                                 use_pallas=use_pallas)
+    One compiled executable serves any conditioning on the full
+    (r, sep) mesh: ``alpha`` defaults to the in-graph guaranteed upper
+    bound :func:`repro.core.norms.sigma_max_upper`, and the lower bound
+    ``l`` (when not given) is estimated *sep-collectively in-graph* —
+    each device forms the partial Gram of its (m/sep, n) row block, one
+    psum over "sep" yields the global Gram, and the deflated
+    inverse-power estimate of :func:`repro.core.norms.sigma_min_lower`
+    runs replicated on the n x n result (the same PDSYRK + DGSUM2D
+    structure as the iteration itself).  The bound feeds
+    :func:`repro.core.zolo.run_dynamic`'s in-graph Zolotarev
+    coefficients; each group selects its own term through the bundle's
+    ``coeff_select`` and the fused combine psum over "zolo" produces
+    the next iterate.
+
+    ``r`` is fixed by the mesh's "zolo" axis (it is a *static* group
+    count, exactly like ``zolo_pd``'s r).  ``first_mode`` in {"auto",
+    "cholqr2", "chol"} selects the peeled first iteration
+    ("householder" additionally allowed on sep=1 meshes; under "auto"
+    the extreme-regime branch substitutes shifted CholeskyQR2 on sep>1
+    meshes — structured Householder QR is not row-distributable).
+    Returns Q (or (Q, PolarInfo) with ``return_info=True``); the info
+    carries the runtime iteration count, final residual, and final l.
+    """
+    r, nsep, has_sep, m, n, m_pad, x_spec = _mesh_layout(
+        a, mesh, r, first_mode, qr_iters=1,
+        first_iter_modes=("auto",), mode_knob="first_mode")
+    dtype = a.dtype
+    eps_f = eps or float(jnp.finfo(dtype).eps)
+    alpha = _norms.sigma_max_upper(a) if alpha is None else jnp.asarray(alpha)
+    x0 = a / alpha.astype(dtype)
+    if m_pad != m:
+        x0 = jnp.pad(x0, ((0, m_pad - m), (0, 0)))
+    coeff_dtype = jnp.promote_types(dtype, jnp.float32)
+    if combine_kernel is None:
+        combine_kernel = _default_combine_kernel(dtype)
+
+    # check_rep=False: the rep checker cannot type the fori_loop carry of
+    # the in-graph sigma_min estimate (the loop runs on the post-psum —
+    # replicated — Gram, but the checker rejects the carry's widening
+    # replication; jax suggests exactly this workaround).  Replication is
+    # established by construction: every scalar derives from "sep"-psum
+    # results and the iterate from the "zolo" combine psum.
+    @functools.partial(shard_map, mesh=mesh, in_specs=(x_spec,),
+                       out_specs=(x_spec, P(), P(), P()),
+                       check_rep=False)
+    def run(x):
+        assert x.shape == (m_pad // nsep, n), \
+            (x.shape, m_pad, nsep, "iterate not row-sharded over 'sep'")
+        xw = (jax.lax.axis_index("zolo") == 0).astype(coeff_dtype)
+        ops = _group_ops(has_sep, xw, combine_kernel)
+        if l is None:
+            # the paper's runtime kappa estimate, distributed: partial
+            # Gram + psum("sep") through the collective bundle (zero
+            # pad rows contribute nothing), inverse-power replicated
+            l0 = _norms.sigma_min_lower(x, iters=est_iters, gram=ops.gram)
+        else:
+            l0 = jnp.asarray(l)
+        l0 = jnp.clip(l0, 4 * eps_f, 1.0 - eps_f)
+        l0 = l0.astype(jnp.result_type(l0, 0.0))
+        return _zolo.run_dynamic(x, l0, r, eps=eps_f, max_iters=max_iters,
+                                 first_mode=first_mode, ops=ops,
+                                 allow_householder=(nsep == 1))
+
+    q, l_fin, k, res = run(x0)
+    if m_pad != m:
+        q = q[:m]
+    if return_info:
+        return q, PolarInfo(iterations=k, residual=res, l_final=l_fin)
+    return q
+
+
+# round-number prior for the psum cost charged per word until measured;
+# benchmarks/comm_calibrate.py produces the calibrated replacement
+DEFAULT_COMM_FLOPS_PER_WORD = 32.0
 
 
 def grouped_iteration_flops(m: int, n: int, r: int, iters: int,
                             gram_shared: bool, sep: int = 1,
-                            comm_flops_per_word: float = 32.0) -> float:
+                            comm_flops_per_word=None) -> float:
     """Flops (summed over the r groups, per device within a group) of
     ``iters`` Cholesky-variant Zolotarev iterations on an m x n matrix.
 
@@ -232,7 +322,17 @@ def grouped_iteration_flops(m: int, n: int, r: int, iters: int,
     model prices the sep speed-up against its communication and the
     planner's grouped scoring (this total / r = the per-group critical
     path) stays honest for sep > 1 meshes.
+
+    ``comm_flops_per_word=None`` resolves to the
+    ``DEFAULT_COMM_FLOPS_PER_WORD`` prior (so cost models can pass a
+    caller's possibly-absent calibration straight through);
+    ``benchmarks/comm_calibrate.py`` measures the actual psum cost per
+    word against the device's matmul flop rate (committed as
+    ``BENCH_comm.json``), and a calibrated value threads through
+    planning via ``SvdConfig.extra["comm_flops_per_word"]``.
     """
+    if comm_flops_per_word is None:
+        comm_flops_per_word = DEFAULT_COMM_FLOPS_PER_WORD
     if sep < 1:
         raise ValueError(f"sep degree must be >= 1, got {sep}")
     if gram_shared and sep != 1:

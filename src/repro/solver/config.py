@@ -39,7 +39,11 @@ class SvdConfig:
     l0_policy    "given" (use ``l0`` as supplied), "estimate_at_plan"
                  (derive ``l0 = 0.9 / kappa`` from the ``kappa`` hint at
                  plan time), or "runtime" (a dynamic backend estimates
-                 the bound in-graph; ``l0`` must be None).
+                 the bound in-graph; ``l0`` must be None).  "runtime"
+                 combined with ``mesh=`` resolves to a grouped-capable
+                 dynamic backend (``zolo_grouped_dynamic``: the bound is
+                 estimated sep-collectively in-graph), so one compiled
+                 grouped executable serves any conditioning.
     kappa        condition-number hint used by plan-time selection
                  (auto method scoring, r choice, l0 estimation).
     max_iters    schedule length cap; None keeps each backend's default.
@@ -66,6 +70,10 @@ class SvdConfig:
     extra        extra backend kwargs as a sorted tuple of (name, value)
                  pairs — the hashable passthrough for knobs the config
                  does not model (e.g. ``alpha`` for dynamic drivers).
+                 One key is reserved for the planner itself:
+                 ``comm_flops_per_word`` (the psum calibration measured
+                 by ``benchmarks/comm_calibrate.py``) threads into every
+                 cost-model scoring call and never reaches the backend.
     """
 
     method: str = "auto"

@@ -86,20 +86,27 @@ class PlanResolution:
 
 
 # config knobs routed through plan_fn, and the output keys that count as
-# consuming them (a schedule subsumes the bounds it was built from)
+# consuming them (a schedule subsumes the bounds it was built from; the
+# dynamic drivers bind l0 as their l= override and qr_mode as the peeled
+# first iteration's first_mode=)
 _KNOB_CONSUMED_AS = {
     "r": ("r", "schedule"),
     "l0": ("l0", "l", "schedule"),
     "max_iters": ("max_iters", "schedule"),
-    "qr_mode": ("qr_mode",),
+    "qr_mode": ("qr_mode", "first_mode"),
     "qr_iters": ("qr_iters",),
 }
 
 
-def _capability_ok(spec, mode: str) -> bool:
+def _capability_ok(spec, mode: str, runtime_l0: bool = False) -> bool:
     # auto never picks reference oracles or comparison baselines — they
     # stay reachable by explicit method= only
     if spec.is_oracle or spec.baseline:
+        return False
+    if runtime_l0 and not spec.dynamic:
+        # the in-graph bound estimate needs a runtime-conditioning
+        # backend in every mode (a grouped static schedule cannot
+        # consume a bound that only exists at execution time)
         return False
     if mode == "grouped":
         return spec.supports_grouped
@@ -108,27 +115,50 @@ def _capability_ok(spec, mode: str) -> bool:
     return spec.dynamic if mode == "dynamic" else not spec.dynamic
 
 
+def _dynamic_methods(mesh_bound: bool) -> list:
+    """Registered dynamic backends, restricted to grouped-capable ones
+    when the caller's plan is mesh-bound — an error message listing
+    methods the mesh could never run would send the caller in circles."""
+    names = [n for n in _registry.list_polar()
+             if _registry.get_polar(n).dynamic]
+    if mesh_bound:
+        return [n for n in names
+                if _registry.get_polar(n).supports_grouped]
+    # no mesh: a grouped-only backend is equally unreachable
+    return [n for n in names if not _registry.get_polar(n).requires_mesh]
+
+
 def _select_method(mode: str, m: int, n: int, r_hint: int,
-                   kappa: float, dtype=None, sep: int = 1):
+                   kappa: float, dtype=None, sep: int = 1,
+                   runtime_l0: bool = False, comm_flops_per_word=None):
     """method="auto": capability filter, then cheapest by ``flops_fn``.
 
     ``sep`` is the grouped mesh's intra-group distribution degree: the
     cost model divides each group's Gram/solve work by it (plus a psum
     communication term), so auto scoring ranks grouped backends by their
     true per-device critical path on the (r, sep) mesh.
+    ``runtime_l0`` restricts candidates to dynamic backends (the
+    l0_policy="runtime" bound only exists at execution time), and
+    ``comm_flops_per_word`` threads a calibrated psum cost
+    (``SvdConfig.extra``; see ``benchmarks/comm_calibrate.py``) into
+    every cost model.
     """
     cands = [_registry.get_polar(name) for name in _registry.list_polar()]
-    cands = [s for s in cands if _capability_ok(s, mode)]
+    cands = [s for s in cands if _capability_ok(s, mode, runtime_l0)]
     if not cands:
         raise ValueError(f"no registered polar backend supports "
-                         f"mode={mode!r}")
+                         f"mode={mode!r}" +
+                         (" with l0_policy='runtime'" if runtime_l0
+                          else ""))
+    comm_kw = ({} if comm_flops_per_word is None
+               else {"comm_flops_per_word": comm_flops_per_word})
 
     def score(spec):
         if spec.flops_fn is None:
             return (1, 0.0, spec.name)  # unranked: after every costed spec
         flops = float(spec.flops_fn(m, n, r=r_hint, kappa=kappa,
                                     grouped=(mode == "grouped"),
-                                    dtype=dtype, sep=sep))
+                                    dtype=dtype, sep=sep, **comm_kw))
         if mode == "grouped":
             flops /= max(r_hint, 1)  # per-group critical path
         return (0, flops, spec.name)
@@ -136,7 +166,8 @@ def _select_method(mode: str, m: int, n: int, r_hint: int,
     return min(cands, key=score)
 
 
-def _validate_capability(spec, mode: str, config: SvdConfig) -> None:
+def _validate_capability(spec, mode: str, config: SvdConfig,
+                         mesh_bound: bool = False) -> None:
     if mode == "grouped":
         if not spec.supports_grouped:
             grouped = [n for n in _registry.list_polar()
@@ -144,6 +175,13 @@ def _validate_capability(spec, mode: str, config: SvdConfig) -> None:
             raise ValueError(
                 f"polar method {spec.name!r} does not support grouped "
                 f"(mesh=) execution; grouped-capable methods: {grouped}")
+        if config.l0_policy == "runtime" and not spec.dynamic:
+            raise ValueError(
+                f"l0_policy='runtime' estimates the bound in-graph, "
+                f"which needs a runtime-conditioning backend; "
+                f"{spec.name!r} binds a trace-time schedule "
+                f"(grouped-capable dynamic methods: "
+                f"{_dynamic_methods(mesh_bound=True)})")
         return
     if spec.requires_mesh:
         raise ValueError(f"polar method {spec.name!r} runs grouped only; "
@@ -153,7 +191,7 @@ def _validate_capability(spec, mode: str, config: SvdConfig) -> None:
             f"polar method {spec.name!r} has a trace-time schedule; "
             f"mode='dynamic' needs a runtime-conditioning backend "
             f"(registered dynamic methods: "
-            f"{[n for n in _registry.list_polar() if _registry.get_polar(n).dynamic]})")
+            f"{_dynamic_methods(mesh_bound)})")
     if mode == "static" and spec.dynamic and config.mode != "auto":
         raise ValueError(
             f"polar method {spec.name!r} is a dynamic (runtime "
@@ -162,7 +200,9 @@ def _validate_capability(spec, mode: str, config: SvdConfig) -> None:
     if config.l0_policy == "runtime" and not spec.dynamic:
         raise ValueError(
             f"l0_policy='runtime' estimates the bound in-graph, which "
-            f"needs a dynamic backend; {spec.name!r} is static")
+            f"needs a dynamic backend; {spec.name!r} is static "
+            f"(registered dynamic methods: "
+            f"{_dynamic_methods(mesh_bound)})")
 
 
 def _resolve(config: SvdConfig, shape, dtype, mesh):
@@ -238,13 +278,19 @@ def _resolve(config: SvdConfig, shape, dtype, mesh):
         r = _coeffs.choose_r(kappa_eff)
 
     # --- method -------------------------------------------------------
+    # comm_flops_per_word is a cost-model calibration (see
+    # benchmarks/comm_calibrate.py), not a backend kwarg: it is consumed
+    # here, at scoring time, and never reaches the driver
+    comm_word = dict(config.extra).get("comm_flops_per_word")
     if explicit is not None:
         spec = explicit
     else:
         spec = _select_method(mode, m, n,
                               r or _coeffs.choose_r(kappa_eff), kappa_eff,
-                              dtype=dtype, sep=sep)
-    _validate_capability(spec, mode, config)
+                              dtype=dtype, sep=sep,
+                              runtime_l0=(config.l0_policy == "runtime"),
+                              comm_flops_per_word=comm_word)
+    _validate_capability(spec, mode, config, mesh_bound=(mesh is not None))
 
     res = PlanResolution(method=spec.name, mode=mode,
                          eig_method=eig_spec.name, m=m, n=n, dtype=dtype,
@@ -261,6 +307,7 @@ def _resolve(config: SvdConfig, shape, dtype, mesh):
     # schedule).  An explicitly-set knob the plan_fn does not consume is
     # a configuration error, reported here instead of being dropped.
     backend_kwargs = dict(config.extra)
+    backend_kwargs.pop("comm_flops_per_word", None)  # scoring-only knob
     if spec.plan_fn:
         emitted = dict(spec.plan_fn(res))
         for knob, aliases in _KNOB_CONSUMED_AS.items():
@@ -353,9 +400,13 @@ class SvdPlan:
         kappa = res.kappa if res.kappa is not None else 1e6
         r = res.r if res.r is not None else _coeffs.choose_r(kappa)
         grouped = self.mode == "grouped"
+        comm_word = dict(self.config.extra).get("comm_flops_per_word")
+        comm_kw = ({} if comm_word is None
+                   else {"comm_flops_per_word": comm_word})
         flops = float(self._spec.flops_fn(res.m, res.n, r=r, kappa=kappa,
                                           grouped=grouped,
-                                          dtype=res.dtype, sep=res.sep))
+                                          dtype=res.dtype, sep=res.sep,
+                                          **comm_kw))
         return flops / max(r, 1) if grouped else flops
 
     def __repr__(self):
