@@ -27,6 +27,7 @@ from benchmarks import (  # noqa: E402
     roofline,
     structured_qr_bench,
     svd_compare,
+    svd_serve,
 )
 
 SUITES = {
@@ -39,6 +40,7 @@ SUITES = {
     "kernels": kernels_bench.run,       # Pallas kernel parity
     "grouped_scaling": grouped_scaling.run,  # Alg. 3 (r, sep) sweep
     "comm_calibrate": comm_calibrate.run,  # psum cost per word
+    "svd_serve": svd_serve.run,         # serving solves/s + latency
     "roofline": roofline.run,           # §Roofline summary (from dry-run)
 }
 

@@ -1,0 +1,76 @@
+"""Serving throughput: solves/s and latency percentiles of the SVD
+service under an open-loop heterogeneous stream.
+
+The solver-side analog of a decode tokens/s microbenchmark: each row is
+one (batch_size, arrival_rate) cell of the sweep, driven end-to-end
+through :func:`repro.launch.svd_serve.run_workload` — Poisson arrivals
+over a mixed shape pool (tall, wide, two accuracy modes), bucketed into
+the padded plan pool, continuously micro-batched, async-dispatched.
+Writes the machine-readable ``BENCH_serve.json`` record: solves/s,
+p50/p99 latency, pad-waste fraction, plan-cache hit rate per cell (the
+hit rate is 1.0 and retraces 0 in every cell — the warmed steady state
+the service tests assert).
+
+CPU rows prove the serving machinery and its overheads; a TPU run of
+this same file regenerates honest wall-clock.
+
+  PYTHONPATH=src python -m benchmarks.run --only svd_serve
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_SERVE_JSON", "BENCH_serve.json")
+REQUESTS = int(os.environ.get("REPRO_BENCH_SERVE_REQUESTS", "48"))
+BATCH_SIZES = (2, 4, 8)
+RATES = (100.0, 400.0)
+SHAPES = ((96, 64), (120, 80), (64, 48), (40, 100))
+MODES = ("fast", "standard")
+
+
+def run():
+    import jax.numpy as jnp
+
+    from repro.launch.svd_serve import run_workload
+    from repro.serve import ServiceConfig, SvdService
+
+    records = []
+    for batch in BATCH_SIZES:
+        for rate in RATES:
+            service = SvdService(ServiceConfig(batch_size=batch,
+                                               max_wait=0.005))
+            rec = run_workload(service, SHAPES, modes=MODES,
+                               requests=REQUESTS, rate=rate,
+                               kappa=1e3, dtype=jnp.float64, seed=0)
+            rec["batch_size"] = batch
+            records.append(rec)
+            emit(f"serve.b{batch}.rate{rate:.0f}",
+                 1e6 / rec["solves_per_s"],
+                 f"{rec['solves_per_s']:.1f}/s "
+                 f"p50={rec['p50_ms']:.1f}ms p99={rec['p99_ms']:.1f}ms "
+                 f"waste={rec['pad_waste']:.2f} "
+                 f"hit={rec['plan_cache_hit_rate']:.2f}")
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({
+            "bench": "svd_serve",
+            "requests_per_cell": REQUESTS,
+            "shape_pool": [list(s) for s in SHAPES],
+            "mode_pool": list(MODES),
+            "device": "cpu",
+            "note": "open-loop Poisson stream; CPU rows prove the "
+                    "serving machinery — regenerate on TPU for honest "
+                    "wall-clock",
+            "records": records,
+        }, f, indent=1)
+    emit("serve.json_record", 0.0, BENCH_JSON)
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("JAX_ENABLE_X64", "1")
+    print("name,us_per_call,derived")
+    run()

@@ -7,19 +7,15 @@ cache regimes behind the decode_32k / long_500k dry-run shapes.
   PYTHONPATH=src python examples/serve_lm.py
 """
 
-import os
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro import configs as CFG  # noqa: E402
-from repro.models import model as M  # noqa: E402
-from repro.serve.engine import ServeEngine  # noqa: E402
+from repro import configs as CFG
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
 
 
 def demo(arch: str, batch: int = 4, prompt: int = 64, gen: int = 48):

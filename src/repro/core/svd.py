@@ -120,6 +120,16 @@ def _zolo_grouped_dynamic_flops(m, n, *, r, kappa, grouped=False,
     return base + (int(r) if grouped else 1) * estimate
 
 
+# The recorded Pallas f32 NaN envelope (ROADMAP item 4a): the kernels
+# accumulate the shifted Gram A^T A + c_j I in f32, and past this
+# conditioning the smallest Zolotarev shift no longer keeps it positive
+# definite at f32 resolution — the Cholesky factor silently goes NaN.
+# Measured edge (n=256, geometric spectrum, r=2): clean at kappa = 2e4,
+# NaN from 3e4 on; the ceiling sits at the last clean decade so a plan
+# fails loudly *before* the breakdown instead of at it.
+PALLAS_F32_KAPPA_MAX = 2.0e4
+
+
 def _pallas_penalty(base, dtype):
     """The one place the Pallas kernel pricing policy lives.
 
@@ -143,12 +153,26 @@ def _pallas_penalty(base, dtype):
     return base * penalty
 
 
+def _pallas_envelope_priced(flops, kappa, dtype):
+    """Price the f32 NaN envelope into auto scoring: a sub-f64 plan
+    beyond :data:`PALLAS_F32_KAPPA_MAX` would raise in the backend's
+    plan_fn (fail-loud), so auto must never select it — an unpriced
+    candidate that then errors would make ``method="auto"`` unusable at
+    high conditioning on TPU.  Infinity keeps the spec scoreable (and
+    explicitly plannable, where the plan_fn raises the real error)."""
+    if dtype is not None and jnp.dtype(dtype).itemsize < 8 \
+            and kappa is not None and float(kappa) > PALLAS_F32_KAPPA_MAX:
+        return float("inf")
+    return flops
+
+
 def _zolo_pallas_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1,
                        comm_flops_per_word=None):
     """``zolo_static`` arithmetic under the Pallas pricing policy."""
-    return _pallas_penalty(
+    return _pallas_envelope_priced(_pallas_penalty(
         _zolo_flops(m, n, r=r, kappa=kappa, grouped=grouped, sep=sep,
-                    comm_flops_per_word=comm_flops_per_word), dtype)
+                    comm_flops_per_word=comm_flops_per_word), dtype),
+        kappa, dtype)
 
 
 def _zolo_pallas_dynamic_flops(m, n, *, r, kappa, grouped=False,
@@ -164,9 +188,10 @@ def _zolo_pallas_dynamic_flops(m, n, *, r, kappa, grouped=False,
     ``zolo_pallas`` vs ``zolo_static``; off-TPU/f64 the penalties keep
     auto away).  The margin lives only where static and dynamic compete
     in one pool: the grouped candidates."""
-    return _pallas_penalty(
+    return _pallas_envelope_priced(_pallas_penalty(
         _zolo_flops(m, n, r=r, kappa=kappa, grouped=grouped, sep=sep,
-                    comm_flops_per_word=comm_flops_per_word), dtype)
+                    comm_flops_per_word=comm_flops_per_word), dtype),
+        kappa, dtype)
 
 
 def _qdwh_flops(m, n, *, r, kappa, grouped=False, dtype=None, sep=1,
@@ -247,6 +272,31 @@ def _newton_planfn(res):
     return {"max_iters": res.max_iters} if res.max_iters is not None else {}
 
 
+def _pallas_envelope_planfn(inner):
+    """Wrap a Pallas binding's plan_fn with the f32-envelope check.
+
+    Raises at plan time — not as runtime NaNs — when a Pallas backend is
+    planned in sub-f64 precision at conditioning beyond
+    :data:`PALLAS_F32_KAPPA_MAX`.  Dynamic plans without a kappa/l0 hint
+    pass through (their conditioning only exists at execution time)."""
+
+    @functools.wraps(inner)
+    def planfn(res):
+        if jnp.dtype(res.dtype).itemsize < 8 and res.kappa is not None \
+                and float(res.kappa) > PALLAS_F32_KAPPA_MAX:
+            raise ValueError(
+                f"{res.method!r} planned at kappa={res.kappa:.3g} in "
+                f"{jnp.dtype(res.dtype).name}: beyond the Pallas f32 "
+                f"NaN envelope (kappa <= {PALLAS_F32_KAPPA_MAX:.0e} — "
+                f"the f32-accumulated shifted Gram goes indefinite and "
+                f"Cholesky returns NaN; ROADMAP item 4a).  Plan in "
+                f"float64, lower the kappa/l0 hint, or use a non-Pallas "
+                f"backend (e.g. 'zolo_static', 'zolo')")
+        return inner(res)
+
+    return planfn
+
+
 register_polar("zolo", dynamic=True,
                flops_fn=_zolo_flops, plan_fn=_zolo_dynamic_planfn,
                description="dynamic Zolo-PD, in-graph coefficients")(
@@ -273,14 +323,15 @@ register_polar("zolo_grouped_dynamic", dynamic=True, supports_grouped=True,
                            "(r, sep) mesh")(
     _grouped_zolo_dynamic_adapter)
 register_polar("zolo_pallas",
-               flops_fn=_zolo_pallas_flops, plan_fn=_zolo_static_planfn,
+               flops_fn=_zolo_pallas_flops,
+               plan_fn=_pallas_envelope_planfn(_zolo_static_planfn),
                description="Pallas kernel-backed trace-time Zolo-PD "
                            "(fused Gram + r-term combine; compiled on "
                            "TPU, interpret mode elsewhere)")(
     _zolo_pallas.zolo_pd_pallas)
 register_polar("zolo_pallas_dynamic", dynamic=True,
                flops_fn=_zolo_pallas_dynamic_flops,
-               plan_fn=_zolo_dynamic_planfn,
+               plan_fn=_pallas_envelope_planfn(_zolo_dynamic_planfn),
                description="Pallas kernel-backed dynamic Zolo-PD "
                            "(in-graph coefficients; the kernel hot "
                            "loops inside the while_loop — compiled on "

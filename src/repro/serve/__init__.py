@@ -1,1 +1,30 @@
+"""repro.serve — request-serving engines.
+
+:mod:`repro.serve.svd_service` is the solver-facing subsystem: bucketed
+plan pool + continuous micro-batching over ``repro.solver`` plans
+(see that module's docstring for the request path).  The LM-shaped
+``ServeEngine`` seed scaffolding remains alongside it.
+"""
+
+from repro.serve.bucketing import BucketKey, BucketPolicy
 from repro.serve.engine import ServeEngine, make_decode_fn, make_prefill_fn
+from repro.serve.scheduler import MicroBatchScheduler
+from repro.serve.svd_service import (
+    DEFAULT_MODES,
+    ServiceConfig,
+    SvdFuture,
+    SvdService,
+)
+
+__all__ = [
+    "BucketKey",
+    "BucketPolicy",
+    "DEFAULT_MODES",
+    "MicroBatchScheduler",
+    "ServeEngine",
+    "ServiceConfig",
+    "SvdFuture",
+    "SvdService",
+    "make_decode_fn",
+    "make_prefill_fn",
+]

@@ -1,0 +1,151 @@
+"""Shape/dtype bucketing for SVD serving: the padded plan-key ladder.
+
+A request stream carries arbitrary (m, n) problems, but compiled-
+executable reuse (the whole point of the PR-2 plan cache) needs a SMALL
+set of (shape, dtype, config) keys.  The bridge is a geometric size
+ladder: every request is canonically oriented (rows >= cols; wide
+inputs transpose in and their factors transpose back out), zero-padded
+up to the next rung (M, N), and solved through the ONE plan for that
+rung.  The spectrum is then masked back out of the padded factors.
+
+Why zero padding is *exact* here, in two steps:
+
+* **Zero rows** change nothing: the Gram X^T X — the only way the
+  iteration touches the row space — is unchanged, so every singular
+  value and right vector is identical and the extra left rows stay
+  exactly zero.  This is the same padding `repro.dist.grouped` proves
+  per-shard when it rounds m up to a multiple of the "sep" axis.
+* **Zero columns** inject exactly (N - n) *zero* singular values.  The
+  composed Zolotarev (and QDWH) map is an odd rational function with
+  f(0) = 0, so the injected values stay exactly 0 through every polar
+  iteration (the shifted Gram G + cI remains positive definite — c > 0
+  — so no factorization ever fails), the H-stage sees a block-diagonal
+  H = diag(H_A, 0), and the descending sort parks the injected zeros at
+  the tail of the spectrum.  :func:`unpad_svd` slices them off.
+
+The measured cost of padding is the pad-waste fraction
+(:func:`pad_waste`): the fraction of batched flops spent on zeros.  The
+ladder's ``growth`` trades that waste against the number of live
+compiled executables — the serving analog of a paging granularity knob.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class BucketKey(NamedTuple):
+    """One padded plan key: everything that selects a compiled executable.
+
+    ``m_pad >= n_pad`` always (canonical orientation); ``dtype`` is the
+    request dtype's canonical string name; ``mode`` is the service
+    accuracy-mode tag (it selects the plan's kappa hint / schedule
+    depth, so two modes at one padded shape are two executables).
+    """
+
+    m_pad: int
+    n_pad: int
+    dtype: str
+    mode: str
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Geometric size ladder: rungs are ``base * ceil(growth^k)``.
+
+    ``base`` floors the smallest rung (tiny problems share one bucket
+    instead of one executable each); ``growth`` bounds per-dimension
+    overpadding at ``growth``x, i.e. the worst-case pad-waste fraction
+    of a single request at ``1 - 1/growth^2`` — the default 1.5 ladder
+    (32, 48, 72, 108, 162, 243, ...) caps it at ~55% while keeping the
+    rung count logarithmic in the served shape range.
+    """
+
+    base: int = 32
+    growth: float = 1.5
+
+    def __post_init__(self):
+        if self.base < 1:
+            raise ValueError(f"bucket base must be >= 1, got {self.base}")
+        if self.growth <= 1.0:
+            raise ValueError(
+                f"bucket growth must be > 1 (the ladder must climb), "
+                f"got {self.growth}")
+
+    def rung(self, size: int) -> int:
+        """Smallest ladder rung >= size."""
+        if size < 1:
+            raise ValueError(f"bucketed dimensions are >= 1, got {size}")
+        s = self.base
+        while s < size:
+            s = int(math.ceil(s * self.growth))
+        return s
+
+    def key_for(self, shape: Tuple[int, int], dtype, mode: str) -> "BucketKey":
+        """The padded plan key serving a (m, n) request.
+
+        Orientation-free: (m, n) and (n, m) land in the same bucket
+        (the service transposes wide inputs to canonical rows >= cols
+        before padding).
+        """
+        m, n = int(shape[0]), int(shape[1])
+        if m < n:
+            m, n = n, m
+        return BucketKey(self.rung(m), self.rung(n),
+                         jnp.dtype(dtype).name, str(mode))
+
+
+def canonicalize(a):
+    """(a_canonical, transposed) with rows >= cols.
+
+    Same convention as ``repro.core.zolo.polar_canonical``; the service
+    applies it *before* padding so every bucket is tall and
+    :func:`unpad_svd` undoes it after masking.
+    """
+    m, n = a.shape[-2], a.shape[-1]
+    if m >= n:
+        return a, False
+    return jnp.swapaxes(a, -1, -2), True
+
+
+def pad_to_bucket(a, m_pad: int, n_pad: int):
+    """Zero-pad a canonical (m, n) matrix to the (m_pad, n_pad) rung."""
+    m, n = a.shape[-2], a.shape[-1]
+    if m > m_pad or n > n_pad:
+        raise ValueError(f"matrix {a.shape} does not fit bucket "
+                         f"({m_pad}, {n_pad})")
+    if (m, n) == (m_pad, n_pad):
+        return a
+    return jnp.pad(a, ((0, m_pad - m), (0, n_pad - n)))
+
+
+def unpad_svd(u, s, vh, m: int, n: int, transposed: bool):
+    """Mask the padded spectrum back out of a bucket-shaped SVD.
+
+    ``u`` (m_pad, n_pad) / ``s`` (n_pad,) / ``vh`` (n_pad, n_pad) are
+    the padded solve of a canonical (m, n) request.  The n genuine
+    singular triplets lead the descending spectrum (the injected values
+    are exactly 0 — see the module docstring), their left vectors are
+    zero on the padded rows and their right vectors zero on the padded
+    columns, so slicing is the exact inverse of the padding.  For a
+    transposed (originally wide) request the factors swap back:
+    A = (U S Vh)^T = V S U^T.
+    """
+    u = u[..., :m, :n]
+    s = s[..., :n]
+    vh = vh[..., :n, :n]
+    if transposed:
+        return jnp.swapaxes(vh, -1, -2), s, jnp.swapaxes(u, -1, -2)
+    return u, s, vh
+
+
+def pad_waste(shapes, m_pad: int, n_pad: int, slots: int) -> float:
+    """Fraction of a dispatched (slots, m_pad, n_pad) batch spent on
+    padding: 1 - useful/total, counting empty slots as pure waste."""
+    useful = sum(min(m, n) * max(m, n) for m, n in shapes)
+    total = slots * m_pad * n_pad
+    return 1.0 - useful / total if total else 0.0

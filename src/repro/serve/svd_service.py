@@ -1,0 +1,391 @@
+"""SVD serving: heterogeneous request stream -> bucketed, micro-batched,
+plan-cached solves.
+
+The paper's pitch is throughput — Zolotarev order-r iterations trade
+flops for parallelism so many processes finish a factorization sooner —
+and the plan/execute surface of PR 2 already compiles one executable per
+(shape, dtype, config).  This module turns that cache into a *service*:
+
+    svc = SvdService(ServiceConfig(batch_size=8))
+    svc.warmup([(96, 64), (100, 33)])          # populate + pin the pool
+    fut = svc.submit(a, mode="standard")       # any (m, n), any dtype
+    svc.poll()                                 # drain queues -> dispatch
+    u, s, vh = fut.result()                    # blocks HERE, nowhere else
+
+Request path (each stage is its own module):
+
+1.  **Bucketing** (:mod:`repro.serve.bucketing`) — canonical transpose,
+    geometric size ladder, zero padding that is exact through the polar
+    iteration (f(0) = 0; see that module's proof), spectrum masked back
+    out at unpack.
+2.  **Scheduling** (:mod:`repro.serve.scheduler`) — continuous
+    micro-batching: per-bucket FIFOs drained into fixed-slot batches,
+    slots refilled between dispatches, partial batches forced by
+    head-of-line age so no shape starves.
+3.  **Execution** — ``SvdPlan.svd_batched`` at the bucket's padded
+    shape.  The batch slot count is FIXED (empty slots carry zero
+    matrices), so each bucket is exactly one compiled executable and
+    the steady state performs zero retraces; the plan is re-looked-up
+    through ``repro.solver.plan`` on every dispatch, which is what the
+    service's plan-cache hit-rate metric measures (warmed buckets are
+    ``pin``-ned so LRU pressure from other tenants cannot evict them).
+4.  **Response edge** — dispatch is asynchronous (JAX's dispatch
+    returns futures-like arrays immediately); completed batches are
+    detected with the non-blocking ``Array.is_ready`` sweep, and
+    ``jax.block_until_ready`` runs only inside ``SvdFuture.result``.
+
+The service is single-threaded and cooperative: ``submit`` enqueues,
+``poll`` dispatches and sweeps, compute overlaps the Python loop via
+JAX's async dispatch.  ``result()`` on a not-yet-dispatched future
+flushes its bucket, so simple callers never deadlock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import repro.solver as _solver
+from repro.serve.bucketing import (
+    BucketKey,
+    BucketPolicy,
+    canonicalize,
+    pad_to_bucket,
+    pad_waste,
+    unpad_svd,
+)
+from repro.serve.scheduler import MicroBatchScheduler
+
+# accuracy mode -> plan-time condition-number hint: the knob that sets
+# the Zolotarev order r and schedule depth of a bucket's executable.  A
+# request whose true kappa exceeds its mode's hint still converges
+# monotonically (the composed map is monotone on [0, 1]) but to reduced
+# accuracy — that is the contract an accuracy mode buys.
+DEFAULT_MODES: Dict[str, float] = {
+    "fast": 1e2,
+    "standard": 1e4,
+    "tight": 1e8,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Frozen serving configuration.
+
+    batch_size   slots per dispatched micro-batch (per bucket); ALSO the
+                 compiled batch shape, so it is a plan-pool key knob.
+    base/growth  the :class:`BucketPolicy` geometric ladder.
+    max_wait     seconds a partial batch's head request may age before
+                 the scheduler force-dispatches it with padded slots.
+    modes        accuracy-mode tag -> kappa hint (plan-time schedule
+                 depth); requests name a tag, never a kappa.
+    method       solver method for bucket plans ("auto": the cost model
+                 picks per padded shape/dtype).
+    data_axis    optional device list to shard the batch axis over (one
+                 matrix per device when batch_size % ndev == 0) — the
+                 multi-device serving layout; None keeps single-device
+                 dispatch.
+    """
+
+    batch_size: int = 4
+    base: int = 32
+    growth: float = 1.5
+    max_wait: float = 0.005
+    modes: Tuple[Tuple[str, float], ...] = tuple(
+        sorted(DEFAULT_MODES.items()))
+    method: str = "auto"
+    data_axis: Optional[Tuple[Any, ...]] = None
+
+    def mode_kappa(self, mode: str) -> float:
+        for tag, kappa in self.modes:
+            if tag == mode:
+                return float(kappa)
+        raise ValueError(f"unknown accuracy mode {mode!r} "
+                         f"(one of {[t for t, _ in self.modes]})")
+
+
+@dataclasses.dataclass
+class _Request:
+    seq: int
+    shape: Tuple[int, int]          # original (m, n)
+    transposed: bool
+    padded: Any                     # canonical, bucket-shaped matrix
+    future: "SvdFuture"
+    t_submit: float
+
+
+class SvdFuture:
+    """Per-request handle: resolved by the service, blocked only by you.
+
+    States: *queued* (in a bucket FIFO) -> *dispatched* (the batch ran;
+    results are async JAX arrays) -> *done* (arrays observed ready by a
+    service sweep).  ``result()`` is the response edge — the only place
+    ``jax.block_until_ready`` runs; calling it early force-flushes the
+    owning bucket so it can never deadlock on an un-filled batch.
+    """
+
+    def __init__(self, service: "SvdService", seq: int):
+        self._service = service
+        self.seq = seq
+        self._out = None
+        self.t_submit: Optional[float] = None
+        self.t_done: Optional[float] = None
+
+    @property
+    def dispatched(self) -> bool:
+        return self._out is not None
+
+    def done(self) -> bool:
+        """Non-blocking: has a sweep observed the results ready?"""
+        return self.t_done is not None
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-ready seconds, once done (the benchmark metric)."""
+        if self.t_done is None or self.t_submit is None:
+            return None
+        return self.t_done - self.t_submit
+
+    def result(self):
+        """(u, s, vh) of the request — blocks until ready."""
+        while self._out is None:
+            self._service.poll(force=True)
+        out = jax.block_until_ready(self._out)
+        if self.t_done is None:
+            self.t_done = self._service._clock()
+        return out
+
+    # service-side transitions ------------------------------------------
+    def _dispatch(self, out) -> None:
+        self._out = out
+
+    def _complete(self, now: float) -> None:
+        if self.t_done is None:
+            self.t_done = now
+
+
+@dataclasses.dataclass
+class _Inflight:
+    key: BucketKey
+    raw: Tuple[Any, ...]            # batch-level arrays to probe
+    futures: List[SvdFuture]
+
+    def is_ready(self) -> bool:
+        return all(a.is_ready() for a in self.raw)
+
+
+class SvdService:
+    """The serving engine: submit -> (bucket, schedule, batch) -> future."""
+
+    def __init__(self, config: ServiceConfig = ServiceConfig(),
+                 clock=time.monotonic):
+        self.config = config
+        self.policy = BucketPolicy(base=config.base, growth=config.growth)
+        self._clock = clock
+        self._sched = MicroBatchScheduler(config.batch_size,
+                                          max_wait=config.max_wait,
+                                          clock=clock)
+        self._inflight: List[_Inflight] = []
+        self._seq = 0
+        self._sharding = None
+        if config.data_axis is not None:
+            ndev = len(config.data_axis)
+            if config.batch_size % ndev != 0:
+                raise ValueError(
+                    f"data_axis has {ndev} devices but batch_size="
+                    f"{config.batch_size} does not divide over them")
+            mesh = jax.sharding.Mesh(list(config.data_axis), ("data",))
+            self._sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("data", None, None))
+        # serving counters (cache stats are deltas vs these baselines,
+        # re-snapshotted by warmup so the steady-state metric is clean)
+        self._stats = {"solves": 0, "batches": 0, "slots": 0,
+                       "slots_filled": 0, "useful_elems": 0,
+                       "padded_elems": 0}
+        self._cache_base = _solver.cache_stats()
+        self._trace_base = _solver.trace_count()
+        self._warm: List[BucketKey] = []
+
+    # --- plan pool -----------------------------------------------------
+
+    def _bucket_config(self, key: BucketKey) -> _solver.SvdConfig:
+        # sub-f32 request dtypes factorize in f32 (there is no stable
+        # low-precision Cholesky path) and cast back at the plan edge
+        compute = ("float32"
+                   if jnp.dtype(key.dtype).itemsize < 4 else None)
+        return _solver.SvdConfig(method=self.config.method,
+                                 kappa=self.config.mode_kappa(key.mode),
+                                 l0_policy="estimate_at_plan",
+                                 compute_dtype=compute)
+
+    def _bucket_plan(self, key: BucketKey):
+        return _solver.plan(self._bucket_config(key),
+                            (key.m_pad, key.n_pad), key.dtype)
+
+    def warmup(self, shapes: Sequence[Tuple[int, int]],
+               modes: Sequence[str] = ("standard",),
+               dtypes: Sequence[Any] = ("float64",)) -> List[BucketKey]:
+        """Populate and pin the plan pool for an expected workload.
+
+        For every (shape, mode, dtype) combination: resolve the bucket,
+        build (or cache-hit) its plan, ``pin`` it against LRU eviction,
+        and run one zero-filled batch through ``svd_batched`` so the
+        batch executable is compiled *before* traffic arrives.  Returns
+        the warmed keys; cache/trace baselines are re-snapshotted, so
+        ``stats()`` afterwards reports steady-state hit rate and
+        retraces (the zero-retrace contract the tests assert).
+        """
+        keys: List[BucketKey] = []
+        for dtype in dtypes:
+            for mode in modes:
+                for shape in shapes:
+                    key = self.policy.key_for(shape, dtype, mode)
+                    if key in keys:
+                        continue
+                    keys.append(key)
+                    plan = self._bucket_plan(key)
+                    _solver.pin(plan)
+                    zeros = jnp.zeros(
+                        (self.config.batch_size, key.m_pad, key.n_pad),
+                        jnp.dtype(key.dtype))
+                    if self._sharding is not None:
+                        zeros = jax.device_put(zeros, self._sharding)
+                    jax.block_until_ready(plan.svd_batched(zeros))
+        self._warm.extend(keys)
+        self._cache_base = _solver.cache_stats()
+        self._trace_base = _solver.trace_count()
+        return keys
+
+    # --- request path --------------------------------------------------
+
+    def submit(self, a, mode: str = "standard") -> SvdFuture:
+        """Enqueue one (m, n) SVD request; returns its future.
+
+        Accepts any 2-D matrix (tall, wide, square) of any dtype the
+        solver takes.  The call is non-blocking: padding is a cheap
+        async device op and dispatch happens at the next ``poll``.
+        """
+        a = jnp.asarray(a)
+        if a.ndim != 2:
+            raise ValueError(f"SVD requests are one (m, n) matrix; got "
+                             f"shape {tuple(a.shape)}")
+        self.config.mode_kappa(mode)  # fail fast on unknown tags
+        now = self._clock()
+        key = self.policy.key_for(a.shape, a.dtype, mode)
+        a_c, transposed = canonicalize(a)
+        fut = SvdFuture(self, self._seq)
+        fut.t_submit = now
+        req = _Request(seq=self._seq, shape=tuple(a.shape),
+                       transposed=transposed,
+                       padded=pad_to_bucket(a_c, key.m_pad, key.n_pad),
+                       future=fut, t_submit=now)
+        self._seq += 1
+        self._sched.enqueue(key, req, now=now)
+        return fut
+
+    def poll(self, force: bool = False) -> int:
+        """Dispatch every ready micro-batch and sweep completions.
+
+        Non-blocking; returns the number of batches dispatched.
+        ``force=True`` flushes partial batches regardless of age (the
+        shutdown / explicit-flush path).
+        """
+        dispatched = 0
+        for key, reqs in self._sched.ready(now=self._clock(), force=force):
+            self._dispatch(key, reqs)
+            dispatched += 1
+        self._sweep()
+        return dispatched
+
+    def flush(self) -> None:
+        """Dispatch everything pending and block until all results are
+        ready (the only batch-level block in the service)."""
+        while self._sched.pending():
+            self.poll(force=True)
+        for flight in self._inflight:
+            jax.block_until_ready(flight.raw)
+        self._sweep()
+
+    def _dispatch(self, key: BucketKey, reqs: List[_Request]) -> None:
+        plan = self._bucket_plan(key)  # LRU hit in steady state
+        slots = self.config.batch_size
+        dtype = jnp.dtype(key.dtype)
+        mats = [r.padded for r in reqs]
+        if len(mats) < slots:
+            # fixed batch shape = one executable per bucket; a zero
+            # matrix is solver-exact (every factor is zero) and cheap
+            mats += [jnp.zeros((key.m_pad, key.n_pad), dtype)] * \
+                (slots - len(mats))
+        batch = jnp.stack(mats)
+        if self._sharding is not None:
+            batch = jax.device_put(batch, self._sharding)
+        u_b, s_b, vh_b = plan.svd_batched(batch)
+        futures = []
+        for i, r in enumerate(reqs):
+            m, n = r.shape
+            mc, nc = (n, m) if r.transposed else (m, n)
+            out = unpad_svd(u_b[i], s_b[i], vh_b[i], mc, nc, r.transposed)
+            r.future._dispatch(out)
+            futures.append(r.future)
+        self._inflight.append(_Inflight(key, (u_b, s_b, vh_b), futures))
+        self._stats["solves"] += len(reqs)
+        self._stats["batches"] += 1
+        self._stats["slots"] += slots
+        self._stats["slots_filled"] += len(reqs)
+        self._stats["useful_elems"] += sum(m * n for m, n in
+                                           (r.shape for r in reqs))
+        self._stats["padded_elems"] += slots * key.m_pad * key.n_pad
+
+    def _sweep(self) -> None:
+        """Timestamp completions without blocking: pop in-flight batches
+        whose arrays report ready (dispatch order = completion order on
+        a single stream)."""
+        now = self._clock()
+        while self._inflight and self._inflight[0].is_ready():
+            flight = self._inflight.pop(0)
+            for fut in flight.futures:
+                fut._complete(now)
+
+    # --- observability -------------------------------------------------
+
+    def pending(self) -> int:
+        return self._sched.pending()
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving counters + the plan-pool metrics the scheduler reads.
+
+        ``plan_cache_hit_rate`` is hits/(hits+misses) of
+        ``repro.solver.cache_stats()`` since the last ``warmup`` — 1.0
+        in steady state over a warmed bucket set.  ``retraces`` counts
+        backend traces over the same window — 0 is the zero-retrace
+        serving contract.  ``pad_waste`` is the fraction of dispatched
+        batch elements spent on padding (shape padding + empty slots).
+        """
+        cache = _solver.cache_stats()
+        hits = cache["hits"] - self._cache_base["hits"]
+        misses = cache["misses"] - self._cache_base["misses"]
+        looked = hits + misses
+        padded = self._stats["padded_elems"]
+        return {
+            **self._stats,
+            "pad_waste": (1.0 - self._stats["useful_elems"] / padded
+                          if padded else 0.0),
+            "slot_fill": (self._stats["slots_filled"] / self._stats["slots"]
+                          if self._stats["slots"] else 1.0),
+            "plan_cache_hit_rate": hits / looked if looked else 1.0,
+            "plan_cache": cache,
+            "retraces": _solver.trace_count() - self._trace_base,
+            "warm_buckets": list(self._warm),
+            "inflight": len(self._inflight),
+            "pending": self._sched.pending(),
+        }
+
+
+def batch_pad_waste(shapes, key: BucketKey, slots: int) -> float:
+    """Convenience re-export of :func:`repro.serve.bucketing.pad_waste`
+    keyed by a :class:`BucketKey` (benchmark/report helper)."""
+    return pad_waste(shapes, key.m_pad, key.n_pad, slots)

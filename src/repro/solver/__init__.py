@@ -16,20 +16,28 @@ from repro.solver.config import SvdConfig
 from repro.solver.planner import (
     PlanResolution,
     SvdPlan,
+    cache_stats,
     clear_plan_cache,
+    pin,
     plan,
     plan_cache_stats,
     plan_for_call,
+    set_plan_cache_capacity,
     trace_count,
+    unpin,
 )
 
 __all__ = [
     "PlanResolution",
     "SvdConfig",
     "SvdPlan",
+    "cache_stats",
     "clear_plan_cache",
+    "pin",
     "plan",
     "plan_cache_stats",
     "plan_for_call",
+    "set_plan_cache_capacity",
     "trace_count",
+    "unpin",
 ]

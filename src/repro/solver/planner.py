@@ -42,7 +42,8 @@ _UNSET = object()  # "leave want_h to the backend's default" sentinel
 # beyond any in-repo workload; hot plans are kept by the LRU order.
 _PLANS_MAX = 128
 _PLANS: "collections.OrderedDict[tuple, SvdPlan]" = collections.OrderedDict()
-_STATS = {"traces": 0, "plan_hits": 0, "plan_misses": 0}
+_PINNED: set = set()  # plan keys exempt from LRU eviction
+_STATS = {"traces": 0, "plan_hits": 0, "plan_misses": 0, "evictions": 0}
 
 
 def trace_count() -> int:
@@ -58,9 +59,70 @@ def plan_cache_stats() -> dict:
     return dict(_STATS, plans=len(_PLANS))
 
 
+def cache_stats() -> dict:
+    """Public plan-cache counters: the serving observability surface.
+
+    ``hits``/``misses``/``evictions`` are monotonic; ``size`` is live
+    plans, ``pinned`` of those exempt from LRU eviction, ``capacity``
+    the LRU bound (see :func:`set_plan_cache_capacity`).  A service
+    measures steady-state hit rate as the hits/(hits+misses) delta
+    between two snapshots.
+    """
+    return {"hits": _STATS["plan_hits"], "misses": _STATS["plan_misses"],
+            "evictions": _STATS["evictions"], "size": len(_PLANS),
+            "pinned": len(_PINNED), "capacity": _PLANS_MAX}
+
+
+def _plan_key(p: "SvdPlan") -> tuple:
+    return (p.config, p.shape, jnp.dtype(p.dtype), p.mesh)
+
+
+def pin(p: "SvdPlan") -> None:
+    """Exempt a plan from LRU eviction (a service's warmed bucket set
+    must survive cache pressure from other tenants).  Idempotent; the
+    plan re-enters the cache if it was already evicted."""
+    key = _plan_key(p)
+    _PLANS.setdefault(key, p)
+    _PINNED.add(key)
+
+
+def unpin(p: "SvdPlan") -> None:
+    """Return a pinned plan to normal LRU lifetime.  Idempotent."""
+    _PINNED.discard(_plan_key(p))
+
+
+def set_plan_cache_capacity(n: int) -> int:
+    """Set the LRU bound (returns the previous one), evicting now if the
+    cache is over it.  Pinned plans never count toward eviction order
+    but do occupy ``size`` — capacity below the pinned count keeps every
+    pin and nothing else."""
+    global _PLANS_MAX
+    if n < 1:
+        raise ValueError(f"plan cache capacity must be >= 1, got {n}")
+    prev, _PLANS_MAX = _PLANS_MAX, int(n)
+    _evict()
+    return prev
+
+
+def _evict() -> None:
+    over = len(_PLANS) - _PLANS_MAX
+    if over <= 0:
+        return
+    for key in list(_PLANS):  # OrderedDict: least-recently-used first
+        if over <= 0:
+            break
+        if key in _PINNED:
+            continue
+        del _PLANS[key]
+        _STATS["evictions"] += 1
+        over -= 1
+
+
 def clear_plan_cache() -> None:
-    """Drop all cached plans (and their compiled executables)."""
+    """Drop all cached plans (and their compiled executables), pins
+    included.  Does not reset counters — they are monotonic."""
     _PLANS.clear()
+    _PINNED.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -614,8 +676,7 @@ def plan(config: SvdConfig, shape, dtype, mesh=None) -> SvdPlan:
                     _eig_kwargs=eig_kwargs)
     _PLANS[key] = built
     _PLANS.move_to_end(key)
-    while len(_PLANS) > _PLANS_MAX:
-        _PLANS.popitem(last=False)  # evict least-recently-used
+    _evict()
     return built
 
 

@@ -326,8 +326,14 @@ def test_auto_scores_zolo_pallas_without_picking_baselines():
     assert p.flops_estimate is not None
     # the kernels accumulate in f32: an f64 plan must price zolo_pallas
     # above the f32 score so auto never silently degrades precision
-    assert pallas_spec.flops_fn(128, 96, dtype=jnp.float64, **kw) > \
-        pallas_spec.flops_fn(128, 96, dtype=jnp.float32, **kw)
+    # (compared inside the f32 NaN envelope, where f32 is plannable)
+    kw_env = dict(r=2, kappa=1e4)
+    assert pallas_spec.flops_fn(128, 96, dtype=jnp.float64, **kw_env) > \
+        pallas_spec.flops_fn(128, 96, dtype=jnp.float32, **kw_env)
+    # beyond the envelope an f32 pallas plan would raise in its plan_fn,
+    # so the cost model prices it out of auto entirely
+    assert pallas_spec.flops_fn(128, 96, dtype=jnp.float32, **kw) == \
+        float("inf")
 
 
 def test_flops_fn_sep_degree():
@@ -499,3 +505,76 @@ def test_wrappers_share_the_plan_path():
     S.plan(S.SvdConfig(method="zolo_static", l0=0.9 / kappa, r=2,
                        scale="none"), a.shape, a.dtype)
     assert S.plan_cache_stats()["plans"] == stats1["plans"]
+
+
+def test_cache_stats_public_surface():
+    """cache_stats()/pin()/set_plan_cache_capacity(): the serving
+    observability hooks, with plan_cache_stats() staying back-compat."""
+    base = S.cache_stats()
+    assert set(base) >= {"hits", "misses", "evictions", "size",
+                         "pinned", "capacity"}
+    p = S.plan(S.SvdConfig(method="zolo_static", l0=1e-3, r=2),
+               (40, 24), jnp.float64)
+    S.plan(S.SvdConfig(method="zolo_static", l0=1e-3, r=2),
+           (40, 24), jnp.float64)
+    got = S.cache_stats()
+    assert got["hits"] == base["hits"] + 1
+    assert got["misses"] >= base["misses"] + 1
+    # the legacy keys survive for existing callers
+    legacy = S.plan_cache_stats()
+    assert {"plans", "plan_hits", "plan_misses", "traces"} <= set(legacy)
+
+    S.pin(p)
+    assert S.cache_stats()["pinned"] >= 1
+    prev = S.set_plan_cache_capacity(1)
+    try:
+        for kappa in (2e3, 3e3, 4e3):
+            S.plan(S.SvdConfig(method="zolo_static", l0=0.9 / kappa),
+                   (40, 24), jnp.float64)
+        churned = S.cache_stats()
+        assert churned["evictions"] > got["evictions"]
+        # the pinned plan survived the squeeze: same object comes back
+        again = S.plan(S.SvdConfig(method="zolo_static", l0=1e-3, r=2),
+                       (40, 24), jnp.float64)
+        assert again is p
+        S.unpin(p)
+        S.plan(S.SvdConfig(method="zolo_static", l0=0.9 / 5e3),
+               (40, 24), jnp.float64)
+        # unpinned, over capacity: now evictable
+        assert S.cache_stats()["size"] <= 2
+    finally:
+        S.set_plan_cache_capacity(prev)
+    with pytest.raises(ValueError, match="capacity"):
+        S.set_plan_cache_capacity(0)
+
+
+def test_pallas_f32_envelope_fails_loudly():
+    """ROADMAP item 4a (fail-loud half): a Pallas backend planned in
+    sub-f64 precision beyond the recorded NaN envelope raises at plan
+    time instead of returning NaN at run time."""
+    from repro.core.svd import PALLAS_F32_KAPPA_MAX
+
+    bad = S.SvdConfig(method="zolo_pallas", kappa=1e5,
+                      l0_policy="estimate_at_plan")
+    with pytest.raises(ValueError, match="NaN envelope"):
+        S.plan(bad, (96, 64), jnp.float32)
+    with pytest.raises(ValueError, match="NaN envelope"):
+        S.plan(S.SvdConfig(method="zolo_pallas_dynamic", kappa=1e5,
+                           l0_policy="estimate_at_plan"),
+               (96, 64), jnp.float32)
+    # f64 accumulates past the envelope: allowed
+    S.plan(bad, (96, 64), jnp.float64)
+    # inside the envelope: allowed (the committed pd_compare setting)
+    S.plan(S.SvdConfig(method="zolo_pallas", kappa=9.06e3 / 0.9,
+                       l0_policy="estimate_at_plan"),
+           (96, 64), jnp.float32)
+    # a dynamic plan with no conditioning hint only knows kappa at run
+    # time — plannable (the envelope is the caller's responsibility)
+    S.plan(S.SvdConfig(method="zolo_pallas_dynamic"),
+           (96, 64), jnp.float32)
+    # auto never selects a backend that would raise: the envelope is
+    # priced to infinity in the Pallas cost models
+    p = S.plan(S.SvdConfig(kappa=10 * PALLAS_F32_KAPPA_MAX,
+                           l0_policy="estimate_at_plan"),
+               (96, 64), jnp.float32)
+    assert "pallas" not in p.method

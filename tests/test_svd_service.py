@@ -1,0 +1,291 @@
+"""SVD serving subsystem: bucketing exactness, scheduler policy, service
+futures, and the zero-retrace / 100%-hit-rate steady-state contract."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as C
+import repro.solver as S
+from repro.serve import (
+    BucketKey,
+    BucketPolicy,
+    MicroBatchScheduler,
+    ServiceConfig,
+    SvdService,
+)
+from repro.serve.bucketing import pad_waste
+
+from conftest import make_matrix, run_multidevice_script
+
+
+# --- bucketing policy --------------------------------------------------------
+
+
+def test_bucket_ladder_is_geometric():
+    pol = BucketPolicy(base=32, growth=1.5)
+    assert [pol.rung(s) for s in (1, 32, 33, 48, 49, 100, 150)] == \
+        [32, 32, 48, 48, 72, 108, 162]
+    # monotone, and never below the request size
+    for s in range(1, 400, 7):
+        assert pol.rung(s) >= s
+        assert pol.rung(s + 1) >= pol.rung(s)
+
+
+def test_bucket_key_orientation_free():
+    pol = BucketPolicy()
+    k1 = pol.key_for((40, 100), jnp.float64, "standard")
+    k2 = pol.key_for((100, 40), jnp.float64, "standard")
+    assert k1 == k2 == BucketKey(108, 48, "float64", "standard")
+    # dtype and mode are key dimensions: distinct executables
+    assert pol.key_for((40, 100), jnp.float32, "standard") != k1
+    assert pol.key_for((40, 100), jnp.float64, "fast") != k1
+
+
+def test_bucket_policy_validates():
+    with pytest.raises(ValueError, match="growth"):
+        BucketPolicy(growth=1.0)
+    with pytest.raises(ValueError, match="base"):
+        BucketPolicy(base=0)
+    with pytest.raises(ValueError, match=">= 1"):
+        BucketPolicy().rung(0)
+
+
+def test_pad_waste_accounting():
+    # one exact-fit matrix in a 1-slot bucket: zero waste
+    assert pad_waste([(48, 32)], 48, 32, 1) == 0.0
+    # empty slots are pure waste
+    assert pad_waste([(48, 32)], 48, 32, 2) == pytest.approx(0.5)
+    # orientation-free useful-element count
+    assert pad_waste([(32, 48)], 48, 32, 1) == 0.0
+
+
+# --- padded-solve exactness across the ladder --------------------------------
+
+
+@pytest.mark.parametrize("shape", [(96, 64), (33, 97), (48, 48), (100, 40),
+                                   (108, 72), (7, 5)])
+def test_padded_solve_matches_unpadded(shape):
+    """The tentpole exactness claim: a bucketed (padded rows+cols,
+    masked-out) solve equals the direct solve to tier-1 tolerance, for
+    tall, wide, square, exact-fit, and tiny shapes."""
+    m, n = shape
+    kappa = 1e3
+    a = make_matrix(m, n, kappa, seed=m * 100 + n)
+    svc = SvdService(ServiceConfig(batch_size=2, max_wait=0.0))
+    fut = svc.submit(a, mode="standard")
+    u, s, vh = fut.result()
+    k = min(m, n)
+    assert u.shape == (m, k) and s.shape == (k,) and vh.shape == (k, n)
+    s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)
+    np.testing.assert_allclose(np.asarray(s), s_ref, atol=1e-11)
+    assert float(C.svd_residual(a, u, s, vh)) < 5e-12
+    assert float(C.orthogonality(u)) < 1e-11
+    assert float(C.orthogonality(vh.T)) < 1e-11
+
+
+def test_padded_solve_bf16():
+    """bf16 requests route through an f32 compute plan and come back in
+    bf16, still correct to bf16 resolution."""
+    a = make_matrix(60, 40, 1e2, dtype=jnp.bfloat16, seed=3)
+    svc = SvdService(ServiceConfig(batch_size=2, max_wait=0.0))
+    u, s, vh = svc.submit(a, mode="fast").result()
+    assert u.dtype == s.dtype == vh.dtype == jnp.bfloat16
+    a64 = a.astype(jnp.float64)
+    rec = (u.astype(jnp.float64) * s.astype(jnp.float64)[None, :]
+           ) @ vh.astype(jnp.float64)
+    err = float(jnp.linalg.norm(rec - a64) / jnp.linalg.norm(a64))
+    assert err < 5e-2
+
+
+# --- scheduler policy --------------------------------------------------------
+
+
+def _fake_clock(t0=0.0):
+    state = {"t": t0}
+
+    def clock():
+        return state["t"]
+
+    clock.advance = lambda dt: state.__setitem__("t", state["t"] + dt)
+    return clock
+
+
+def test_scheduler_full_batches_never_wait():
+    clk = _fake_clock()
+    sched = MicroBatchScheduler(2, max_wait=10.0, clock=clk)
+    sched.enqueue("k", "a")
+    assert sched.ready() == []          # partial, head not aged
+    sched.enqueue("k", "b")
+    assert sched.ready() == [("k", ["a", "b"])]   # full: immediate
+    assert sched.pending() == 0
+
+
+def test_scheduler_partial_flush_by_head_age_no_starvation():
+    """A rare bucket is flushed by its head's age even while a hot
+    bucket keeps filling — no request starves behind traffic it does
+    not share a bucket with."""
+    clk = _fake_clock()
+    sched = MicroBatchScheduler(4, max_wait=0.01, clock=clk)
+    sched.enqueue("rare", "r0")
+    rare_flushed_at = None
+    for burst in range(3):
+        for i in range(4):
+            sched.enqueue("hot", f"h{burst}{i}")
+        clk.advance(0.004)
+        batches = sched.ready()
+        assert ("hot", [f"h{burst}{i}" for i in range(4)]) in batches
+        if ("rare", ["r0"]) in batches and rare_flushed_at is None:
+            rare_flushed_at = clk()
+    # flushed by head age — after max_wait, regardless of hot traffic
+    assert rare_flushed_at is not None and rare_flushed_at >= 0.01
+    assert sched.pending() == 0
+
+
+def test_scheduler_oldest_head_first_and_burst_drain():
+    clk = _fake_clock()
+    sched = MicroBatchScheduler(2, max_wait=0.0, clock=clk)
+    sched.enqueue("b", "b0")
+    clk.advance(0.001)
+    for item in ("a0", "a1", "a2", "a3", "a4"):
+        sched.enqueue("a", item)
+    got = sched.ready()
+    # bucket "b" has the oldest head -> dispatches first; bucket "a"
+    # drains two full batches plus the aged partial in one call
+    assert got == [("b", ["b0"]), ("a", ["a0", "a1"]),
+                   ("a", ["a2", "a3"]), ("a", ["a4"])]
+
+
+def test_scheduler_force_flush():
+    sched = MicroBatchScheduler(4, max_wait=100.0, clock=_fake_clock())
+    sched.enqueue("k", "x")
+    assert sched.ready() == []
+    assert sched.ready(force=True) == [("k", ["x"])]
+
+
+def test_scheduler_validates():
+    with pytest.raises(ValueError, match="batch_size"):
+        MicroBatchScheduler(0)
+    with pytest.raises(ValueError, match="max_wait"):
+        MicroBatchScheduler(1, max_wait=-1.0)
+
+
+# --- service: futures, ordering, steady state --------------------------------
+
+
+def test_futures_resolve_in_submission_order_per_bucket():
+    """FIFO within a bucket: each future's result reconstructs its own
+    matrix (no slot permutation), and completion order follows
+    submission order."""
+    kappa = 1e3
+    svc = SvdService(ServiceConfig(batch_size=2, max_wait=0.0))
+    mats = [make_matrix(40, 30, kappa, seed=s) for s in range(5)]
+    futs = [svc.submit(a) for a in mats]
+    assert svc.pending() == 5
+    svc.poll(force=True)
+    assert svc.pending() == 0
+    for a, fut in zip(mats, futs):
+        u, s, vh = fut.result()
+        assert float(C.svd_residual(a, u, s, vh)) < 5e-12
+    seqs = [f.seq for f in futs]
+    assert seqs == sorted(seqs)
+    done = [f.t_done for f in futs]
+    assert done == sorted(done)
+
+
+def test_mixed_stream_zero_retraces_full_hit_rate():
+    """The acceptance contract: after warmup over the expected shape
+    set, a mixed-shape/mode stream runs at 100% plan-cache hit rate
+    with zero retraces."""
+    shapes = [(96, 64), (40, 100), (64, 48)]
+    svc = SvdService(ServiceConfig(batch_size=4, max_wait=0.0))
+    svc.warmup(shapes, modes=("fast", "standard"), dtypes=("float64",))
+    rng = np.random.default_rng(0)
+    futs = []
+    for i in range(17):   # not a batch multiple: exercises empty slots
+        m, n = shapes[int(rng.integers(len(shapes)))]
+        mode = ("fast", "standard")[int(rng.integers(2))]
+        futs.append(svc.submit(make_matrix(m, n, 1e2, seed=i), mode))
+    svc.flush()
+    assert all(f.done() for f in futs)
+    st = svc.stats()
+    assert st["solves"] == 17
+    assert st["plan_cache_hit_rate"] == 1.0
+    assert st["retraces"] == 0
+    assert 0.0 < st["pad_waste"] < 1.0
+    assert st["pending"] == 0 and st["inflight"] == 0
+
+
+def test_warmup_pins_buckets_against_eviction():
+    svc = SvdService(ServiceConfig(batch_size=2, max_wait=0.0))
+    keys = svc.warmup([(48, 32)], modes=("standard",),
+                      dtypes=("float64",))
+    assert len(keys) == 1
+    prev = S.set_plan_cache_capacity(1)
+    try:
+        # churn the cache well past capacity
+        for k in (1e2, 1e3, 1e4):
+            S.plan(S.SvdConfig(method="zolo_static", l0=0.9 / k),
+                   (30, 20), jnp.float64)
+        assert S.cache_stats()["evictions"] >= 2
+        fut = svc.submit(make_matrix(48, 32, 1e3, seed=1))
+        before = S.cache_stats()
+        svc.poll(force=True)
+        fut.result()
+        after = S.cache_stats()
+        # the dispatch re-looked its bucket plan up and HIT: the pin
+        # held through eviction pressure far past capacity
+        assert after["misses"] == before["misses"]
+        assert after["hits"] == before["hits"] + 1
+    finally:
+        S.set_plan_cache_capacity(prev)
+
+
+def test_service_validates_requests():
+    svc = SvdService(ServiceConfig())
+    with pytest.raises(ValueError, match="accuracy mode"):
+        svc.submit(jnp.zeros((4, 4)), mode="nope")
+    with pytest.raises(ValueError, match="one .m, n. matrix"):
+        svc.submit(jnp.zeros((2, 4, 4)))
+    with pytest.raises(ValueError, match="does not divide"):
+        SvdService(ServiceConfig(batch_size=3,
+                                 data_axis=("d0", "d1")))
+
+
+def test_latency_stamps():
+    clk = _fake_clock()
+    svc = SvdService(ServiceConfig(batch_size=1, max_wait=0.0), clock=clk)
+    fut = svc.submit(make_matrix(16, 16, 1e2, seed=0))
+    clk.advance(0.25)
+    svc.poll()
+    fut.result()
+    assert fut.done()
+    assert fut.latency == pytest.approx(0.25)
+
+
+def test_service_multidevice_data_sharded():
+    """batch_size == ndev with data_axis: one padded matrix per device,
+    same exactness, zero retraces (subprocess: XLA device count is fixed
+    at jax import)."""
+    script = """
+import numpy as np
+import jax, jax.numpy as jnp
+import repro.core as C
+from repro.launch.svd_serve import synth_matrix
+from repro.serve import ServiceConfig, SvdService
+
+svc = SvdService(ServiceConfig(batch_size=8, max_wait=0.0,
+                               data_axis=tuple(jax.devices())))
+svc.warmup([(48, 32)], modes=("standard",), dtypes=("float64",))
+mats = [synth_matrix(48, 32, 1e3, seed=s) for s in range(8)]
+futs = [svc.submit(a) for a in mats]
+svc.poll(force=True)
+worst = max(float(C.svd_residual(a, *f.result()))
+            for a, f in zip(mats, futs))
+st = svc.stats()
+assert worst < 5e-12, worst
+assert st["retraces"] == 0 and st["plan_cache_hit_rate"] == 1.0, st
+print("SHARDED_SERVE_OK", worst)
+"""
+    run_multidevice_script(script, "SHARDED_SERVE_OK")
