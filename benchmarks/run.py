@@ -28,6 +28,7 @@ from benchmarks import (  # noqa: E402
     structured_qr_bench,
     svd_compare,
     svd_serve,
+    svd_topk,
 )
 
 SUITES = {
@@ -41,6 +42,7 @@ SUITES = {
     "grouped_scaling": grouped_scaling.run,  # Alg. 3 (r, sep) sweep
     "comm_calibrate": comm_calibrate.run,  # psum cost per word
     "svd_serve": svd_serve.run,         # serving solves/s + latency
+    "svd_topk": svd_topk.run,           # partial-spectrum vs dense slice
     "roofline": roofline.run,           # §Roofline summary (from dry-run)
 }
 

@@ -144,6 +144,25 @@ def sigma_min_lower_qr(x, iters: int = 12, safety: float = 0.5):
     return jnp.maximum(safety * sig, 4 * eps)
 
 
+def singular_interval(a, iters: int = 8):
+    """(lower, upper) bracket of the singular spectrum of ``a``.
+
+    ``upper`` is the guaranteed :func:`sigma_max_upper` bound; ``lower``
+    the deflated :func:`sigma_min_lower` estimate of the pre-scaled
+    matrix, mapped back to the original scale.  This is the shift-
+    selection seed of the spectral divide-and-conquer frontend
+    (:mod:`repro.spectral.dnc`): every spectrum-splitting shift lives in
+    [lower**2, upper**2] on the Gram's eigenvalue axis, so the bracket
+    bounds its bisection.  Both ends are in-graph scalars (promoted to
+    f32-or-better by the sigma_min route).
+    """
+    upper = sigma_max_upper(a)
+    safe = jnp.maximum(upper, jnp.finfo(a.dtype).tiny)
+    x0 = a / safe.astype(a.dtype)
+    lower = sigma_min_lower(x0, iters=iters) * safe
+    return lower, upper
+
+
 def condition_estimate(a, iters: int = 12):
     """kappa_2 estimate: (upper bound on sigma_max) / (lower bound on
     sigma_min), i.e. an over-estimate — safe to feed the Zolotarev

@@ -187,6 +187,34 @@ def structured_qr_q1q2(x, sqrt_c, block: int = 32):
     return q1, q2
 
 
+def cholesky_qr2(x, shift_scale: float = 1.0):
+    """Orthonormalize the columns of a tall ``x`` (..., m, k) by shifted
+    CholeskyQR2 — a Gram + Cholesky + TRSM pass run twice, entirely
+    matmul-shaped (the MXU-native orthonormalization this repo uses
+    everywhere a Householder QR would be a bandwidth bottleneck).
+
+    The eps-scaled trace shift keeps the Cholesky well-posed even when
+    ``x`` is numerically rank-deficient (the extracted basis then spans
+    range(x) plus arbitrary orthonormal fill — exactly what the spectral
+    subspace-extraction and low-rank compression callers want).
+    ``shift_scale`` scales that ridge for callers with dirtier inputs.
+    """
+    k = x.shape[-1]
+    eps = jnp.finfo(x.dtype).eps
+
+    def pass_(p):
+        g = jnp.einsum("...mk,...mn->...kn", p, p,
+                       preferred_element_type=jnp.promote_types(
+                           p.dtype, jnp.float32)).astype(p.dtype)
+        shift = (shift_scale * eps *
+                 jnp.trace(g, axis1=-2, axis2=-1)[..., None, None])
+        l = jnp.linalg.cholesky(g + shift * jnp.eye(k, dtype=p.dtype))
+        return jax.lax.linalg.triangular_solve(
+            l, p, left_side=False, lower=True, transpose_a=True)
+
+    return pass_(pass_(x))
+
+
 def dense_stacked_qr_q1q2(x, sqrt_c):
     """Oracle: thin QR of the dense (m+n) x n stack via jnp.linalg.qr."""
     m, n = x.shape

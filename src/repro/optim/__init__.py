@@ -5,6 +5,7 @@ from repro.optim.compression import (
     compressed_psum,
     init_compression_state,
     lowrank_factor,
+    lowrank_truncate,
 )
 from repro.optim.muon import MuonConfig, ZoloMuon, muon_labels, orthogonalize
 from repro.optim.schedule import warmup_cosine

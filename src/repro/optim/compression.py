@@ -22,21 +22,33 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.structured_qr import cholesky_qr2 as _cholqr2
 
-def _cholqr2(p):
-    """Orthonormalize columns of p (m, k) via shifted CholeskyQR2."""
-    k = p.shape[-1]
-    eps = jnp.finfo(p.dtype).eps
 
-    def pass_(p):
-        g = jnp.einsum("...mk,...mn->...kn", p, p,
-                       preferred_element_type=jnp.float32).astype(p.dtype)
-        shift = eps * jnp.trace(g, axis1=-2, axis2=-1)[..., None, None]
-        l = jnp.linalg.cholesky(g + shift * jnp.eye(k, dtype=p.dtype))
-        return jax.lax.linalg.triangular_solve(
-            l, p, left_side=False, lower=True, transpose_a=True)
+def lowrank_truncate(g, rank: int, *, strategy: str = "auto",
+                     kappa=None, tol: float = 1e-6):
+    """Best-rank-``rank`` factors (p, q) with G ~= P Q^T, through the
+    partial-spectrum planner.
 
-    return pass_(pass_(p))
+    Unlike the PowerSGD iteration below — one warm-started subspace
+    step per optimizer tick, approximation quality amortized over
+    steps — this is the *one-shot* truncation (checkpoint compression,
+    compression-state initialization, accuracy flooring): it plans a
+    :class:`repro.spectral.TopKConfig` at G's shape and takes the true
+    leading-``rank`` triplets, so the result is the Eckart-Young
+    optimum to the configured ``tol``.  ``strategy``/``kappa`` pass
+    through to :func:`repro.spectral.plan_topk` (auto: cost model picks
+    sketch vs dense).  Plans are cached per (shape, dtype, rank), so
+    sweeping a parameter tree costs one compile per distinct shape.
+    """
+    from repro.spectral import TopKConfig, plan_topk
+
+    plan = plan_topk(
+        TopKConfig(k=int(rank), strategy=strategy, tol=tol,
+                   kappa=None if kappa is None else float(kappa)),
+        g.shape[-2:], g.dtype)
+    u, s, vh = plan.topk(g) if g.ndim == 2 else plan.topk_batched(g)
+    return u * s[..., None, :], jnp.swapaxes(vh, -1, -2)
 
 
 def lowrank_factor(g, q_prev, rank: int):

@@ -14,6 +14,7 @@ from repro.serve.svd_service import (
     ServiceConfig,
     SvdFuture,
     SvdService,
+    topk_mode_k,
 )
 
 __all__ = [
@@ -27,4 +28,5 @@ __all__ = [
     "SvdService",
     "make_decode_fn",
     "make_prefill_fn",
+    "topk_mode_k",
 ]

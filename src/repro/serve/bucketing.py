@@ -128,16 +128,53 @@ def unpad_svd(u, s, vh, m: int, n: int, transposed: bool):
 
     ``u`` (m_pad, n_pad) / ``s`` (n_pad,) / ``vh`` (n_pad, n_pad) are
     the padded solve of a canonical (m, n) request.  The n genuine
-    singular triplets lead the descending spectrum (the injected values
-    are exactly 0 — see the module docstring), their left vectors are
-    zero on the padded rows and their right vectors zero on the padded
-    columns, so slicing is the exact inverse of the padding.  For a
-    transposed (originally wide) request the factors swap back:
-    A = (U S Vh)^T = V S U^T.
+    singular triplets must be *identified by padded index, not by
+    value*: the injected triplets' values are exactly 0 (see the module
+    docstring), but a rank-deficient request has genuine zeros too, and
+    the descending sort breaks those ties arbitrarily — slicing the
+    first n entries could then keep an injected triplet (a padded-
+    column basis vector, zero everywhere the request lives) and drop a
+    genuine null-space vector.  The discriminator is right-vector mass
+    on the request's own columns: genuine vectors carry all of it,
+    injected ones exactly none, so a stable partition by that mask
+    selects the n genuine triplets while preserving the descending
+    value order.  For a transposed (originally wide) request the
+    factors swap back: A = (U S Vh)^T = V S U^T.
     """
+    n_pad = s.shape[-1]
+    if n_pad != n:
+        mass = jnp.sum(vh[..., :n] ** 2, axis=-1)
+        # 0 = genuine (mass ~ 1), 1 = injected (mass exactly 0); stable
+        # argsort keeps the descending-s order within each class
+        idx = jnp.argsort((mass < 0.5).astype(jnp.int32), axis=-1,
+                          stable=True)[..., :n]
+        s = jnp.take_along_axis(s, idx, axis=-1)
+        u = jnp.take_along_axis(u, idx[..., None, :], axis=-1)
+        vh = jnp.take_along_axis(vh, idx[..., :, None], axis=-2)
     u = u[..., :m, :n]
     s = s[..., :n]
     vh = vh[..., :n, :n]
+    if transposed:
+        return jnp.swapaxes(vh, -1, -2), s, jnp.swapaxes(u, -1, -2)
+    return u, s, vh
+
+
+def unpad_topk(u, s, vh, m: int, n: int, k: int, transposed: bool):
+    """Mask padding out of a bucket-shaped *top-k* solve.
+
+    ``u`` (m_pad, k) / ``s`` (k,) / ``vh`` (k, n_pad) from the padded
+    top-k of a canonical (m, n) request.  Padding exactness carries
+    over from the full case: zero rows leave the Gram unchanged and
+    zero columns inject exactly-zero singular values, which a top-k
+    solve with k <= n (validated at submit) never ranks above a genuine
+    nonzero triplet.  (When k exceeds the request's *rank*, trailing
+    s = 0 triplets may point anywhere in the padded null space — their
+    sliced right vectors are then not unit norm, but they carry zero
+    weight in any reconstruction.)
+    """
+    u = u[..., :m, :k]
+    s = s[..., :k]
+    vh = vh[..., :k, :n]
     if transposed:
         return jnp.swapaxes(vh, -1, -2), s, jnp.swapaxes(u, -1, -2)
     return u, s, vh

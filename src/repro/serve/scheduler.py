@@ -38,7 +38,11 @@ class MicroBatchScheduler:
     ``batch_size`` is the slot count of every dispatched batch;
     ``max_wait`` (seconds) is the head-of-line age that forces a
     partial dispatch; ``clock`` is injectable for tests (defaults to
-    ``time.monotonic``).
+    ``time.monotonic``).  :meth:`set_max_wait` overrides the age per
+    bucket key — a latency-sensitive lane (small interactive solves)
+    can flush early while bulk lanes keep batching for occupancy; keys
+    without an override keep the global default, so behavior is
+    unchanged unless a caller opts a bucket in.
     """
 
     def __init__(self, batch_size: int, max_wait: float = 0.005,
@@ -49,8 +53,23 @@ class MicroBatchScheduler:
             raise ValueError(f"max_wait must be >= 0, got {max_wait}")
         self.batch_size = int(batch_size)
         self.max_wait = float(max_wait)
+        self._max_wait_by_key: Dict[Hashable, float] = {}
         self._clock = clock
         self._queues: Dict[Hashable, collections.deque] = {}
+
+    def set_max_wait(self, key: Hashable, max_wait: float) -> None:
+        """Override the partial-dispatch age for one bucket key
+        (idempotent; ``None`` restores the global default)."""
+        if max_wait is None:
+            self._max_wait_by_key.pop(key, None)
+            return
+        if max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {max_wait}")
+        self._max_wait_by_key[key] = float(max_wait)
+
+    def max_wait_for(self, key: Hashable) -> float:
+        """The effective partial-dispatch age of a bucket key."""
+        return self._max_wait_by_key.get(key, self.max_wait)
 
     def enqueue(self, key: Hashable, item: Any, now: float = None) -> None:
         now = self._clock() if now is None else now
@@ -81,6 +100,6 @@ class MicroBatchScheduler:
             while len(q) >= self.batch_size:
                 out.append((key, [q.popleft()[1]
                                   for _ in range(self.batch_size)]))
-            if q and (force or now - q[0][0] >= self.max_wait):
+            if q and (force or now - q[0][0] >= self.max_wait_for(key)):
                 out.append((key, [q.popleft()[1] for _ in range(len(q))]))
         return out

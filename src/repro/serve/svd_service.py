@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.solver as _solver
+import repro.spectral as _spectral
 from repro.serve.bucketing import (
     BucketKey,
     BucketPolicy,
@@ -57,8 +58,29 @@ from repro.serve.bucketing import (
     pad_to_bucket,
     pad_waste,
     unpad_svd,
+    unpad_topk,
 )
 from repro.serve.scheduler import MicroBatchScheduler
+
+
+def topk_mode_k(mode: str) -> Optional[int]:
+    """Parse the partial-spectrum lane tag: "topk:<k>" -> k, else None.
+
+    A topk mode is its own bucket dimension — BucketKey.mode carries the
+    full tag, so requests at one padded rung but different k compile
+    (and batch) separately, which is exactly right: k is a static shape
+    parameter of the top-k executable.
+    """
+    if not str(mode).startswith("topk:"):
+        return None
+    try:
+        k = int(str(mode).split(":", 1)[1])
+    except ValueError:
+        k = 0
+    if k < 1:
+        raise ValueError(f"topk mode must be 'topk:<k>' with k >= 1, "
+                         f"got {mode!r}")
+    return k
 
 # accuracy mode -> plan-time condition-number hint: the knob that sets
 # the Zolotarev order r and schedule depth of a bucket's executable.  A
@@ -85,6 +107,10 @@ class ServiceConfig:
                  depth); requests name a tag, never a kappa.
     method       solver method for bucket plans ("auto": the cost model
                  picks per padded shape/dtype).
+    max_wait_overrides  per-mode (tag -> seconds) overrides of
+                 ``max_wait``: a "topk:<k>" or interactive lane can
+                 flush partial batches early while bulk lanes keep
+                 batching.  Unlisted modes keep the global default.
     data_axis    optional device list to shard the batch axis over (one
                  matrix per device when batch_size % ndev == 0) — the
                  multi-device serving layout; None keeps single-device
@@ -99,8 +125,13 @@ class ServiceConfig:
         sorted(DEFAULT_MODES.items()))
     method: str = "auto"
     data_axis: Optional[Tuple[Any, ...]] = None
+    max_wait_overrides: Tuple[Tuple[str, float], ...] = ()
 
     def mode_kappa(self, mode: str) -> float:
+        # the partial-spectrum lane rides the "standard" accuracy hint:
+        # its k is a shape parameter, not an accuracy tag
+        if topk_mode_k(mode) is not None:
+            mode = "standard"
         for tag, kappa in self.modes:
             if tag == mode:
                 return float(kappa)
@@ -208,6 +239,9 @@ class SvdService:
                        "padded_elems": 0}
         self._cache_base = _solver.cache_stats()
         self._trace_base = _solver.trace_count()
+        self._topk_trace_base = _spectral.trace_count()
+        self._wait_overrides = {str(t): float(w)
+                                for t, w in config.max_wait_overrides}
         self._warm: List[BucketKey] = []
 
     # --- plan pool -----------------------------------------------------
@@ -223,8 +257,14 @@ class SvdService:
                                  compute_dtype=compute)
 
     def _bucket_plan(self, key: BucketKey):
-        return _solver.plan(self._bucket_config(key),
-                            (key.m_pad, key.n_pad), key.dtype)
+        k = topk_mode_k(key.mode)
+        if k is None:
+            return _solver.plan(self._bucket_config(key),
+                                (key.m_pad, key.n_pad), key.dtype)
+        inner = self._bucket_config(key)
+        cfg = _spectral.TopKConfig(k=k, kappa=inner.kappa, svd=inner)
+        return _spectral.plan_topk(cfg, (key.m_pad, key.n_pad),
+                                   key.dtype)
 
     def warmup(self, shapes: Sequence[Tuple[int, int]],
                modes: Sequence[str] = ("standard",),
@@ -248,16 +288,24 @@ class SvdService:
                         continue
                     keys.append(key)
                     plan = self._bucket_plan(key)
-                    _solver.pin(plan)
                     zeros = jnp.zeros(
                         (self.config.batch_size, key.m_pad, key.n_pad),
                         jnp.dtype(key.dtype))
                     if self._sharding is not None:
                         zeros = jax.device_put(zeros, self._sharding)
-                    jax.block_until_ready(plan.svd_batched(zeros))
+                    if topk_mode_k(key.mode) is None:
+                        _solver.pin(plan)
+                        jax.block_until_ready(plan.svd_batched(zeros))
+                    else:
+                        # a TopKPlan's executables live on the plan; pin
+                        # its inner SvdPlans against LRU pressure
+                        for inner in plan._inner.values():
+                            _solver.pin(inner)
+                        jax.block_until_ready(plan.topk_batched(zeros))
         self._warm.extend(keys)
         self._cache_base = _solver.cache_stats()
         self._trace_base = _solver.trace_count()
+        self._topk_trace_base = _spectral.trace_count()
         return keys
 
     # --- request path --------------------------------------------------
@@ -274,8 +322,16 @@ class SvdService:
             raise ValueError(f"SVD requests are one (m, n) matrix; got "
                              f"shape {tuple(a.shape)}")
         self.config.mode_kappa(mode)  # fail fast on unknown tags
+        k = topk_mode_k(mode)
+        if k is not None and k > min(a.shape):
+            raise ValueError(
+                f"mode {mode!r} asks for {k} triplets but the request "
+                f"is {tuple(a.shape)} (rank at most {min(a.shape)})")
         now = self._clock()
         key = self.policy.key_for(a.shape, a.dtype, mode)
+        wait = self._wait_overrides.get(str(mode))
+        if wait is not None:
+            self._sched.set_max_wait(key, wait)
         a_c, transposed = canonicalize(a)
         fut = SvdFuture(self, self._seq)
         fut.t_submit = now
@@ -323,12 +379,21 @@ class SvdService:
         batch = jnp.stack(mats)
         if self._sharding is not None:
             batch = jax.device_put(batch, self._sharding)
-        u_b, s_b, vh_b = plan.svd_batched(batch)
+        k = topk_mode_k(key.mode)
+        if k is None:
+            u_b, s_b, vh_b = plan.svd_batched(batch)
+        else:
+            u_b, s_b, vh_b = plan.topk_batched(batch)
         futures = []
         for i, r in enumerate(reqs):
             m, n = r.shape
             mc, nc = (n, m) if r.transposed else (m, n)
-            out = unpad_svd(u_b[i], s_b[i], vh_b[i], mc, nc, r.transposed)
+            if k is None:
+                out = unpad_svd(u_b[i], s_b[i], vh_b[i], mc, nc,
+                                r.transposed)
+            else:
+                out = unpad_topk(u_b[i], s_b[i], vh_b[i], mc, nc, k,
+                                 r.transposed)
             r.future._dispatch(out)
             futures.append(r.future)
         self._inflight.append(_Inflight(key, (u_b, s_b, vh_b), futures))
@@ -378,7 +443,9 @@ class SvdService:
                           if self._stats["slots"] else 1.0),
             "plan_cache_hit_rate": hits / looked if looked else 1.0,
             "plan_cache": cache,
-            "retraces": _solver.trace_count() - self._trace_base,
+            "retraces": (_solver.trace_count() - self._trace_base
+                         + _spectral.trace_count()
+                         - self._topk_trace_base),
             "warm_buckets": list(self._warm),
             "inflight": len(self._inflight),
             "pending": self._sched.pending(),

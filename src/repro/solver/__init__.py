@@ -18,6 +18,7 @@ from repro.solver.planner import (
     SvdPlan,
     cache_stats,
     clear_plan_cache,
+    flops_estimate,
     pin,
     plan,
     plan_cache_stats,
@@ -33,6 +34,7 @@ __all__ = [
     "SvdPlan",
     "cache_stats",
     "clear_plan_cache",
+    "flops_estimate",
     "pin",
     "plan",
     "plan_cache_stats",

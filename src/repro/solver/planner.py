@@ -680,6 +680,21 @@ def plan(config: SvdConfig, shape, dtype, mesh=None) -> SvdPlan:
     return built
 
 
+def flops_estimate(config: SvdConfig, shape, dtype,
+                   mesh=None) -> Optional[float]:
+    """Cost-model score of ``config`` at (shape, dtype) without executing.
+
+    Resolves (and caches) the plan and returns its ``flops_estimate`` —
+    the same per-backend ``flops_fn`` basis ``method="auto"`` ranks
+    with.  This is the strategy hook higher-level planners build on:
+    :func:`repro.spectral.plan_topk` prices its "dense" strategy with
+    exactly this call, so a top-k plan's sketch-vs-dense decision and
+    the solver's own backend selection share one cost-model contract.
+    None when the resolved backend registers no cost model.
+    """
+    return plan(config, shape, dtype, mesh=mesh).flops_estimate
+
+
 _CONFIG_CALL_FIELDS = (("r", int), ("l0", float), ("max_iters", int),
                        ("qr_iters", int), ("qr_mode", str))
 

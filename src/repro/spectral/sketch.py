@@ -1,0 +1,188 @@
+"""Randomized sketch frontend for top-k SVD (the PyParSVD direction).
+
+The observation behind arXiv:2108.08845: when only k singular triplets
+are wanted, the O(m n min(m,n)) full factorization is waste — sketch A
+down to an O(k)-wide panel, run the *existing* solver on the panel, and
+lift the left factor back.  Concretely (canonical tall A, m >= n):
+
+    1.  range finder:  Y = (A A^T)^q A Omega with Omega an n x l test
+        matrix (l = k + oversample), orthonormalized between every
+        product by shifted CholeskyQR2
+        (:func:`repro.core.structured_qr.cholesky_qr2`) so the power
+        iterations never lose the small directions to roundoff;
+    2.  project:       B = Q^T A   (l x n — an O(k)-width problem);
+    3.  solve:         B = U_B diag(s) V^H through a cached
+        :class:`repro.solver.SvdPlan` — the sketch frontend reuses the
+        whole plan/execute machinery, backends and all;
+    4.  lift:          U = Q U_B, keep the leading k triplets.
+
+Test matrices: ``kind="gauss"`` (dense Gaussian, 2 m n l flops per
+pass) or ``kind="srht"`` (subsampled randomized Hadamard transform:
+random column signs, fast Walsh-Hadamard over the row axis, subsample —
+O(m n log n) for the first pass; power passes are Gaussian-shaped
+regardless since they reuse the orthonormalized iterate).
+
+Accuracy is governed by the decay between sigma_k and sigma_{l+1}: the
+standard bounds give relative value error ~ (sigma_{l+1}/sigma_k)^(4q+2)
+after q power iterations.  :func:`needed_power_iters` inverts that model
+under the geometric-spectrum assumption the rest of this repo
+benchmarks with (sigma_i = kappa^(-(i-1)/(n-1))), which is how
+``strategy="auto"`` in :mod:`repro.spectral.topk` decides whether the
+sketch can hit the configured tolerance at all — a flat spectrum prices
+the sketch out and the planner falls back to dense.
+
+The a posteriori check is :func:`topk_residual`: one extra O(m n k)
+pass measuring max_i ||A v_i - s_i u_i|| / sigma_1 — the escalation
+trigger for adaptive solves (:meth:`repro.spectral.topk.TopKPlan.
+topk_adaptive`).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.structured_qr import cholesky_qr2
+
+SKETCH_KINDS = ("gauss", "srht")
+
+
+def gaussian_sketch(a, l: int, key):
+    """Y = A Omega with Omega an n x l standard Gaussian test matrix."""
+    n = a.shape[-1]
+    omega = jax.random.normal(key, (n, l), dtype=a.dtype)
+    return jnp.einsum("...mn,nl->...ml", a, omega)
+
+
+def _fwht(x):
+    """Fast Walsh-Hadamard transform along the last axis (power-of-2
+    length), normalized by 1/sqrt(len): log2(n) reshape-butterfly
+    passes, each O(size)."""
+    n = x.shape[-1]
+    h = 1
+    while h < n:
+        x = x.reshape(x.shape[:-1] + (n // (2 * h), 2, h))
+        a, b = x[..., 0, :], x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2).reshape(
+            x.shape[:-3] + (n,))
+        h *= 2
+    return x / jnp.sqrt(jnp.asarray(n, x.dtype))
+
+
+def srht_sketch(a, l: int, key):
+    """Y = A D H S: random column signs, Walsh-Hadamard mix over the
+    column axis (zero-padded to a power of 2), subsample l columns.
+
+    The Hadamard mix spreads every right singular direction across all
+    columns, so the uniform subsample is a with-high-probability range
+    sketch like the Gaussian one at O(m n log n) cost for the first
+    pass.  Deterministic per ``key``.
+    """
+    n = a.shape[-1]
+    n_pad = 1 << max(1, (n - 1).bit_length())
+    k_sign, k_pick = jax.random.split(key)
+    signs = jax.random.rademacher(k_sign, (n,), dtype=a.dtype)
+    x = a * signs
+    if n_pad != n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, n_pad - n)]
+        x = jnp.pad(x, pad)
+    x = _fwht(x) * jnp.sqrt(jnp.asarray(n_pad / l, x.dtype))
+    cols = jax.random.choice(k_pick, n_pad, (l,), replace=False)
+    return jnp.take(x, cols, axis=-1)
+
+
+def randomized_range(a, l: int, q_iters: int, key, kind: str = "gauss"):
+    """Orthonormal Q (m x l) approximately spanning the leading left
+    singular subspace of ``a`` after ``q_iters`` power iterations.
+
+    Every half-pass re-orthonormalizes through shifted CholeskyQR2, so
+    ill-conditioned spectra (kappa ~ 1e10) neither underflow the small
+    directions nor break the Cholesky (the ridge keeps rank-deficient
+    iterates factorizable — the k >= rank case).
+    """
+    if kind not in SKETCH_KINDS:
+        raise ValueError(f"sketch kind {kind!r} not in {SKETCH_KINDS}")
+    sketch = srht_sketch if kind == "srht" else gaussian_sketch
+    y = sketch(a, l, key)
+    q = cholesky_qr2(y)
+    for _ in range(int(q_iters)):
+        z = cholesky_qr2(jnp.einsum("...mn,...ml->...nl", a, q))
+        q = cholesky_qr2(jnp.einsum("...mn,...nl->...ml", a, z))
+    return q
+
+
+def sketch_topk(a, *, k: int, l: int, q_iters: int, key,
+                small_svd, kind: str = "gauss"):
+    """Leading-k SVD of canonical-tall ``a`` through the sketch.
+
+    ``small_svd`` solves the (l, n) projected panel — the uncompiled
+    impl of a cached :class:`repro.solver.SvdPlan`, so the whole sketch
+    compiles into ONE executable per top-k plan.  Returns
+    (u (m, k), s (k,), vh (k, n)).
+    """
+    q = randomized_range(a, l, q_iters, key, kind=kind)
+    b = jnp.einsum("...ml,...mn->...ln", q, a)
+    u_b, s, vh = small_svd(b)
+    u = jnp.einsum("...ml,...lk->...mk", q, u_b)
+    return u[..., :, :k], s[..., :k], vh[..., :k, :]
+
+
+def needed_power_iters(nmin: int, k: int, l: int,
+                       kappa: float, tol: float,
+                       margin: float = 1e-2) -> Optional[int]:
+    """Power iterations needed for relative value error ``tol`` under
+    the geometric-spectrum model, or None when no finite count works.
+
+    Model: sigma_i = kappa^(-(i-1)/(nmin-1)), value error after q
+    iterations ~ (sigma_{l+1}/sigma_k)^(4q+2); ``margin`` is the safety
+    factor absorbing the model's constants.  l >= nmin is the
+    exhaustive sketch (exact, 0 iterations); kappa <= 1 (no decay) can
+    never converge by decay alone.
+    """
+    if l >= nmin:
+        return 0
+    kappa = float(kappa)
+    if kappa <= 1.0:
+        return None
+    # log10 of the per-index decay ratio sigma_{l+1} / sigma_k < 1
+    log_rho = -(l + 1 - k) * math.log10(kappa) / max(nmin - 1, 1)
+    need = math.log10(float(tol) * margin) / log_rho  # 4q + 2 >= need
+    return max(0, math.ceil((need - 2.0) / 4.0))
+
+
+def sketch_flops(m: int, n: int, k: int, l: int, q_iters: int,
+                 small_flops: float = 0.0) -> float:
+    """Flop model for one sketch solve of a canonical (m, n) problem:
+    first pass + 2 matmuls per power iteration + the CholeskyQR2
+    orthonormalizations + projection + lift, plus the caller-supplied
+    price of the (l, n) panel solve (from the solver's own cost model —
+    see :func:`repro.solver.flops_estimate`)."""
+    pass_ = 2.0 * m * n * l
+    orth = 2.0 * (2.0 * m * l * l + l ** 3 / 3.0)
+    per_iter = 2.0 * pass_ + 2.0 * orth
+    return (pass_ + orth + q_iters * per_iter        # range finder
+            + pass_                                  # B = Q^T A
+            + float(small_flops)                     # SVD of B
+            + 2.0 * m * l * k)                       # lift U = Q U_B
+
+
+def topk_residual(a, u, s, vh):
+    """A posteriori residual: max_i ||A v_i - s_i u_i||_2 / sigma_max.
+
+    For an exact leading-k triplet set this is ~eps; a sketch that
+    missed part of the leading subspace shows up here at the size of
+    what it missed.  One O(m n k) pass — the escalation trigger for
+    adaptive solves.  sigma_max is estimated as max(s_1, a power-
+    iteration bound) so the scale is honest even if s itself is off.
+    """
+    from repro.core import norms as _norms
+
+    av = jnp.einsum("...mn,...kn->...mk", a, vh)
+    res = jnp.linalg.norm(av - u * s[..., None, :], axis=-2)
+    smax = jnp.maximum(s[..., 0],
+                       _norms.sigma_max_power(a, iters=4).astype(s.dtype))
+    return jnp.max(res, axis=-1) / jnp.maximum(
+        smax, jnp.finfo(s.dtype).tiny)

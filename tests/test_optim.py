@@ -107,3 +107,31 @@ def test_compression_exact_for_lowrank(rng):
     for _ in range(3):
         g_hat, err, q = CP.compress_decompress(g, err, q, rank=4)
     assert float(jnp.abs(g_hat - g).max()) < 1e-4
+
+
+def test_lowrank_truncate_through_topk_plan():
+    """One-shot truncation routes through repro.spectral and is the
+    Eckart-Young optimum: error at rank r equals the dense sigma_{r+1}
+    tail, monotonically shrinking as rank grows."""
+    a = make_matrix(96, 48, 1e4, seed=21)
+    ref = np.linalg.svd(np.asarray(a), compute_uv=False)
+    prev = np.inf
+    for rank in (2, 4, 8, 16):
+        p, q = CP.lowrank_truncate(a, rank, kappa=1e4)
+        assert p.shape == (96, rank) and q.shape == (48, rank)
+        err = np.linalg.norm(np.asarray(a) - np.asarray(p) @ np.asarray(q).T, 2)
+        # optimal rank-r 2-norm error is sigma_{r+1}
+        assert err <= ref[rank] * (1 + 1e-6) + 1e-10 * ref[0]
+        assert err <= prev
+        prev = err
+
+
+def test_lowrank_truncate_batched():
+    mats = jnp.stack([make_matrix(64, 32, 1e3, seed=s) for s in (1, 2)])
+    p, q = CP.lowrank_truncate(mats, 4, kappa=1e3)
+    assert p.shape == (2, 64, 4) and q.shape == (2, 32, 4)
+    for i in range(2):
+        ref = np.linalg.svd(np.asarray(mats[i]), compute_uv=False)
+        err = np.linalg.norm(
+            np.asarray(mats[i]) - np.asarray(p[i]) @ np.asarray(q[i]).T, 2)
+        assert err <= ref[4] * (1 + 1e-6) + 1e-10 * ref[0]

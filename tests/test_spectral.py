@@ -1,0 +1,362 @@
+"""repro.spectral: top-k plans, strategies, accuracy and retrace contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_matrix
+from _propcheck import given, settings, st
+
+import repro.spectral as spectral
+from repro.spectral import (
+    TopKConfig,
+    bisect_shift,
+    count_above,
+    needed_power_iters,
+    plan_topk,
+    randomized_range,
+    sketch_flops,
+    srht_sketch,
+    topk_residual,
+    trace_count,
+)
+from repro.solver import SvdConfig
+
+
+def _dense_ref(a, k):
+    s = np.linalg.svd(np.asarray(a), compute_uv=False)
+    return s[:k]
+
+
+def _rankdef_matrix(m, n, kappa, rank, seed=0):
+    a = np.asarray(make_matrix(m, n, kappa, seed=seed))
+    u, s, vh = np.linalg.svd(a, full_matrices=False)
+    s[rank:] = 0.0
+    return jnp.asarray(u @ np.diag(s) @ vh)
+
+
+# --- config / plan surface ----------------------------------------------
+
+
+def test_topk_config_frozen_hashable():
+    c1 = TopKConfig(k=8, kappa=1e6)
+    c2 = TopKConfig(k=8, kappa=1e6)
+    assert c1 == c2 and hash(c1) == hash(c2)
+    assert c1.replace(k=4).k == 4 and c1.k == 8
+    with pytest.raises(Exception):
+        c1.k = 3
+
+
+def test_topk_config_validation():
+    with pytest.raises(ValueError):
+        TopKConfig(k=0)
+    with pytest.raises(ValueError):
+        TopKConfig(strategy="nope")
+    with pytest.raises(ValueError):
+        TopKConfig(sketch_kind="nope")
+    with pytest.raises(TypeError):
+        TopKConfig(svd="auto")
+
+
+def test_plan_topk_validation():
+    with pytest.raises(TypeError):
+        plan_topk("not-a-config", (64, 32))
+    with pytest.raises(ValueError):
+        plan_topk(TopKConfig(k=8), (64, 32, 2))
+    with pytest.raises(ValueError):
+        plan_topk(TopKConfig(k=64), (128, 32))  # k > min(shape)
+
+
+def test_plan_topk_caching_same_object():
+    cfg = TopKConfig(k=4, kappa=1e4)
+    p1 = plan_topk(cfg, (96, 48))
+    p2 = plan_topk(TopKConfig(k=4, kappa=1e4), (96, 48))
+    assert p1 is p2
+    assert plan_topk(cfg, (96, 64)) is not p1  # per-shape
+
+
+def test_plan_shape_dtype_checks():
+    p = plan_topk(TopKConfig(k=4, kappa=1e4), (96, 48))
+    with pytest.raises(ValueError, match="per-shape"):
+        p.topk(jnp.zeros((96, 64)))
+    with pytest.raises(ValueError, match="dtype"):
+        p.topk(jnp.zeros((96, 48), jnp.float32))
+
+
+# --- strategy selection (the cost-model contract) -----------------------
+
+
+def test_auto_picks_sketch_for_small_k():
+    p = plan_topk(TopKConfig(k=8, kappa=1e6), (2048, 512))
+    assert p.strategy == "sketch"
+    assert p.decision["sketch_feasible"]
+    assert p.decision["sketch_flops"] < p.decision["dense_flops"]
+
+
+def test_auto_picks_dense_for_k_near_n():
+    p = plan_topk(TopKConfig(k=500, kappa=1e6), (2048, 512))
+    assert p.strategy == "dense"
+    # l = nmin is no width reduction: the gate, not the flop count,
+    # hands this to dense
+    assert p.l == 512 and not p.decision["sketch_feasible"]
+
+
+def test_auto_falls_back_to_dense_on_flat_spectrum():
+    # kappa ~ 1: no decay for power iterations to amplify; the accuracy
+    # model must refuse the sketch regardless of its flop advantage
+    p = plan_topk(TopKConfig(k=8, kappa=1.0), (2048, 512))
+    assert p.strategy == "dense"
+    assert not p.decision["sketch_feasible"]
+
+
+def test_explicit_strategy_respected():
+    for strategy in ("dense", "sketch", "dnc"):
+        p = plan_topk(TopKConfig(k=4, strategy=strategy, kappa=1e4),
+                      (128, 64))
+        assert p.strategy == strategy
+        assert p.decision["requested"] == strategy
+
+
+def test_flops_estimate_exposed():
+    p = plan_topk(TopKConfig(k=8, kappa=1e6), (2048, 512))
+    assert p.flops_estimate == p.decision[f"{p.strategy}_flops"]
+    assert p.flops_estimate > 0
+
+
+def test_needed_power_iters_model():
+    # exhaustive sketch is exact with zero iterations
+    assert needed_power_iters(64, 8, 64, 1e6, 1e-10) == 0
+    # no decay -> unreachable
+    assert needed_power_iters(512, 8, 16, 1.0, 1e-10) is None
+    # more decay -> fewer iterations; wider sketch -> fewer iterations
+    q_hi = needed_power_iters(512, 8, 40, 1e10, 1e-10)
+    q_lo = needed_power_iters(512, 8, 40, 1e4, 1e-10)
+    assert q_hi <= q_lo
+    assert needed_power_iters(512, 8, 64, 1e4, 1e-10) <= q_lo
+
+
+# --- accuracy: top-k matches the dense leading-k spectrum ---------------
+
+
+def test_acceptance_topk_matches_dense_4096x512():
+    """The PR acceptance case: k=16 at (4096, 512) matches dense to
+    1e-10 in f64."""
+    a = make_matrix(4096, 512, 1e6, seed=11)
+    p = plan_topk(TopKConfig(k=16), (4096, 512))
+    _, s, _ = p.topk(a)
+    ref = _dense_ref(a, 16)
+    assert np.max(np.abs(np.asarray(s) - ref)) <= 1e-10 * ref[0]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2), st.integers(0, 2), st.integers(1, 24))
+def test_property_topk_matches_dense(shape_idx, kappa_idx, k):
+    """Across tall/wide/square and kappa in {1e2, 1e6, 1e10}: the top-k
+    values match the dense leading k to 1e-10 (f64), including k at and
+    beyond the numerical rank."""
+    shapes = [(384, 96), (96, 384), (192, 192)]
+    kappas = [1e2, 1e6, 1e10]
+    m, n = shapes[int(shape_idx)]
+    kappa = kappas[int(kappa_idx)]
+    k = min(int(k), min(m, n))
+    a = make_matrix(m, n, kappa, seed=7 + int(shape_idx))
+    p = plan_topk(TopKConfig(k=k, kappa=kappa), (m, n))
+    u, s, vh = p.topk(a)
+    ref = _dense_ref(a, k)
+    assert np.max(np.abs(np.asarray(s) - ref)) <= 1e-10 * ref[0]
+    assert u.shape == (m, k) and s.shape == (k,) and vh.shape == (k, n)
+    # triplets are consistent: the backward residual obeys the subspace
+    # bound rho^(2q+1) ~ sqrt(value tol) (values converge quadratically,
+    # subspaces linearly — the same gap topk_adaptive's gate encodes)
+    res = float(topk_residual(a, u, s, vh))
+    assert res <= 1e-5
+
+
+def test_topk_beyond_rank():
+    """k greater than the true rank: trailing values are exactly the
+    dense (zero) tail, leading values exact."""
+    a = _rankdef_matrix(256, 64, 1e4, rank=10, seed=3)
+    p = plan_topk(TopKConfig(k=24, kappa=1e4), (256, 64))
+    _, s, _ = p.topk(a)
+    ref = _dense_ref(a, 24)
+    assert np.max(np.abs(np.asarray(s) - ref)) <= 1e-10 * ref[0]
+    assert np.all(np.asarray(s)[10:] <= 1e-10 * ref[0])
+
+
+def test_sketch_strategy_accuracy_explicit():
+    a = make_matrix(1024, 256, 1e6, seed=5)
+    p = plan_topk(TopKConfig(k=16, kappa=1e6), (1024, 256))
+    assert p.strategy == "sketch"  # regression: this regime must sketch
+    _, s, _ = p.topk(a)
+    ref = _dense_ref(a, 16)
+    assert np.max(np.abs(np.asarray(s) - ref)) <= 1e-10 * ref[0]
+
+
+def test_srht_sketch_kind():
+    a = make_matrix(512, 96, 1e6, seed=6)
+    p = plan_topk(TopKConfig(k=8, kappa=1e6, sketch_kind="srht",
+                             strategy="sketch"), (512, 96))
+    _, s, _ = p.topk(a)
+    ref = _dense_ref(a, 8)
+    assert np.max(np.abs(np.asarray(s) - ref)) <= 1e-10 * ref[0]
+
+
+def test_batched_topk():
+    mats = jnp.stack([make_matrix(128, 48, 1e4, seed=s)
+                      for s in (1, 2, 3)])
+    p = plan_topk(TopKConfig(k=6, kappa=1e4), (128, 48))
+    u, s, vh = p.topk_batched(mats)
+    assert u.shape == (3, 128, 6) and s.shape == (3, 6)
+    assert vh.shape == (3, 6, 48)
+    for i in range(3):
+        ref = _dense_ref(mats[i], 6)
+        assert np.max(np.abs(np.asarray(s[i]) - ref)) <= 1e-10 * ref[0]
+
+
+# --- d&c strategy --------------------------------------------------------
+
+
+def test_dnc_topk_matches_dense():
+    a = make_matrix(256, 96, 1e3, seed=8)
+    p = plan_topk(TopKConfig(k=8, strategy="dnc", kappa=1e3), (256, 96))
+    u, s, vh, info = p.topk_with_info(a)
+    ref = _dense_ref(a, 8)
+    assert np.max(np.abs(np.asarray(s) - ref)) <= 1e-10 * ref[0]
+    assert bool(info["converged"])
+    cnt = float(info["count"])
+    assert p.k <= cnt <= p.l
+
+
+def test_dnc_wide_input():
+    a = make_matrix(96, 256, 1e3, seed=9)
+    p = plan_topk(TopKConfig(k=8, strategy="dnc", kappa=1e3), (96, 256))
+    u, s, vh = p.topk(a)
+    ref = _dense_ref(a, 8)
+    assert np.max(np.abs(np.asarray(s) - ref)) <= 1e-10 * ref[0]
+    assert u.shape == (96, 8) and vh.shape == (8, 256)
+
+
+def test_count_above_on_known_spectrum():
+    # diag matrix: sign factor is known in closed form
+    w = jnp.asarray([3.0, 2.0, 1.0, 0.5, 0.1])
+    q = jnp.diag(jnp.sign(w - 0.75))
+    assert float(count_above(q)) == 3.0
+
+
+def test_bisect_shift_diag():
+    """Bisection on an explicitly diagonal Gram: exact sign oracle."""
+    w = jnp.geomspace(1.0, 1e-6, 32)
+    c = jnp.diag(w)
+
+    def sign_fn(x):
+        return jnp.diag(jnp.sign(jnp.diag(x)))
+
+    lo2, hi2 = jnp.asarray(1e-6), jnp.asarray(1.0 + 1e-12)
+    q, s, cnt, converged, rounds = bisect_shift(
+        c, 4, 8, sign_fn, lo2, hi2, max_rounds=24)
+    assert bool(converged)
+    assert 4 <= float(cnt) <= 8
+
+
+# --- compile-once / zero-retrace contract -------------------------------
+
+
+def test_zero_retraces_on_repeat():
+    a = make_matrix(256, 64, 1e4, seed=10)
+    p = plan_topk(TopKConfig(k=4, kappa=1e4), (256, 64))
+    p.topk(a)  # compile
+    before = trace_count()
+    for _ in range(3):
+        p.topk(a)
+    p.topk(a + 0.1 * make_matrix(256, 64, 1e2, seed=12))  # new values
+    assert trace_count() == before
+
+
+def test_zero_retraces_across_strategies():
+    a = make_matrix(128, 64, 1e3, seed=13)
+    for strategy in ("dense", "sketch", "dnc"):
+        p = plan_topk(TopKConfig(k=4, strategy=strategy, kappa=1e3),
+                      (128, 64))
+        p.topk(a)
+        before = trace_count()
+        p.topk(a)
+        assert trace_count() == before, strategy
+
+
+# --- adaptive escalation -------------------------------------------------
+
+
+def test_topk_adaptive_no_escalation_when_accurate():
+    a = make_matrix(512, 128, 1e6, seed=14)
+    p = plan_topk(TopKConfig(k=8, kappa=1e6), (512, 128))
+    assert p.strategy == "sketch"
+    _, s, _, info = p.topk_adaptive(a)
+    assert info["escalated"] is False
+    assert info["residual"] is not None and info["residual"] < 1e-5
+
+
+def test_topk_adaptive_escalates_underpowered_sketch():
+    # an explicitly under-powered sketch (0 iterations, thin window) on
+    # a slowly-decaying spectrum misses tol; escalation must recover
+    # the dense answer
+    a = make_matrix(384, 128, 1e2, seed=15)
+    p = plan_topk(TopKConfig(k=8, oversample=2, power_iters=0,
+                             strategy="sketch", kappa=1e2, tol=1e-10),
+                  (384, 128))
+    _, s, _, info = p.topk_adaptive(a, tol=1e-9)
+    assert info["escalated"] is True
+    ref = _dense_ref(a, 8)
+    assert np.max(np.abs(np.asarray(s) - ref)) <= 1e-10 * ref[0]
+
+
+# --- building blocks -----------------------------------------------------
+
+
+def test_randomized_range_spans_leading_subspace():
+    a = make_matrix(256, 64, 1e8, seed=16)
+    q = randomized_range(a, 16, 4, jax.random.PRNGKey(0))
+    assert q.shape == (256, 16)
+    # orthonormal
+    g = np.asarray(q).T @ np.asarray(q)
+    assert np.linalg.norm(g - np.eye(16)) < 1e-12
+    # captures the leading left vectors: projection residual of u_1..u_4
+    u = np.linalg.svd(np.asarray(a))[0][:, :4]
+    proj = np.asarray(q) @ (np.asarray(q).T @ u)
+    assert np.linalg.norm(proj - u) < 1e-10
+
+
+def test_srht_sketch_shapes_and_determinism():
+    a = make_matrix(64, 48, 1e2, seed=17)
+    y1 = srht_sketch(a, 12, jax.random.PRNGKey(3))
+    y2 = srht_sketch(a, 12, jax.random.PRNGKey(3))
+    assert y1.shape == (64, 12)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_sketch_flops_monotone():
+    base = sketch_flops(4096, 512, 16, 32, 2, small_flops=1e6)
+    assert sketch_flops(4096, 512, 16, 32, 4, small_flops=1e6) > base
+    assert sketch_flops(4096, 512, 16, 64, 2, small_flops=1e6) > base
+
+
+def test_inner_plans_share_solver_cost_basis():
+    """The dense strategy's price is exactly repro.solver.flops_estimate
+    — one cost-model contract across both planners."""
+    from repro.solver import flops_estimate
+
+    p = plan_topk(TopKConfig(k=8, kappa=1e6), (2048, 512))
+    inner = p._inner["dense"]
+    assert p.decision["dense_flops"] == flops_estimate(
+        inner.config, (2048, 512), inner.dtype)
+
+
+def test_topk_cache_stats_counts():
+    spectral.clear_topk_cache()
+    stats0 = spectral.topk_cache_stats()
+    cfg = TopKConfig(k=3, kappa=1e4)
+    plan_topk(cfg, (64, 32))
+    plan_topk(cfg, (64, 32))
+    stats1 = spectral.topk_cache_stats()
+    assert stats1["plan_misses"] == stats0["plan_misses"] + 1
+    assert stats1["plan_hits"] >= stats0["plan_hits"] + 1

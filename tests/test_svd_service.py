@@ -289,3 +289,147 @@ assert st["retraces"] == 0 and st["plan_cache_hit_rate"] == 1.0, st
 print("SHARDED_SERVE_OK", worst)
 """
     run_multidevice_script(script, "SHARDED_SERVE_OK")
+
+
+# --- per-bucket max_wait overrides -------------------------------------------
+
+
+def test_scheduler_per_key_max_wait_override():
+    """An overridden bucket flushes at its own age threshold; other
+    buckets keep the global default — fake-clock, no real sleeping."""
+    clk = _fake_clock()
+    sched = MicroBatchScheduler(4, max_wait=1.0, clock=clk)
+    sched.set_max_wait("fast", 0.01)
+    assert sched.max_wait_for("fast") == 0.01
+    assert sched.max_wait_for("slow") == 1.0
+    sched.enqueue("fast", "f0")
+    sched.enqueue("slow", "s0")
+    clk.advance(0.02)
+    # past the override but far from the default: only "fast" flushes
+    assert sched.ready() == [("fast", ["f0"])]
+    assert sched.pending() == 1
+    clk.advance(1.0)
+    assert sched.ready() == [("slow", ["s0"])]
+    # None restores the default
+    sched.set_max_wait("fast", None)
+    assert sched.max_wait_for("fast") == 1.0
+    with pytest.raises(ValueError, match="max_wait"):
+        sched.set_max_wait("fast", -1.0)
+
+
+def test_service_mode_wait_override():
+    """ServiceConfig.max_wait_overrides maps a mode tag to its own
+    partial-dispatch age; unlisted modes keep the global default."""
+    clk = _fake_clock()
+    svc = SvdService(ServiceConfig(batch_size=4, max_wait=10.0,
+                                   max_wait_overrides=(("fast", 0.0),)),
+                     clock=clk)
+    f_fast = svc.submit(make_matrix(24, 16, 1e2, seed=0), mode="fast")
+    f_std = svc.submit(make_matrix(24, 16, 1e2, seed=1), mode="standard")
+    clk.advance(0.001)
+    svc.poll()
+    assert f_fast.dispatched and not f_std.dispatched
+    svc.poll(force=True)
+    assert f_std.dispatched
+
+
+# --- rank-deficient unpadding ------------------------------------------------
+
+
+def _rankdef(m, n, kappa, rank, seed=0):
+    a = np.asarray(make_matrix(m, n, kappa, seed=seed))
+    u, s, vh = np.linalg.svd(a, full_matrices=False)
+    s[rank:] = 0.0
+    return jnp.asarray(u @ np.diag(s) @ vh)
+
+
+@pytest.mark.parametrize("shape,rank", [((100, 40), 10), ((40, 100), 10),
+                                        ((40, 40), 5)])
+def test_rank_deficient_padded_round_trip(shape, rank):
+    """A rank-deficient request through a padded bucket: genuine
+    triplets must be selected by padded index, not by (tied zero)
+    value — the eig-side factor stays an orthonormal basis of the
+    request's row/column space and reconstruction is exact."""
+    svc = SvdService(ServiceConfig(batch_size=1, max_wait=0.0))
+    a = _rankdef(*shape, 1e3, rank, seed=2)
+    fut = svc.submit(a)
+    svc.poll(force=True)
+    u, s, vh = map(np.asarray, fut.result())
+    m, n = shape
+    nmin = min(m, n)
+    assert u.shape == (m, nmin) and s.shape == (nmin,)
+    assert vh.shape == (nmin, n)
+    # The basis that comes from the symmetric eig is orthonormal even
+    # at zero singular values; the polar-route partner factor (U = Q V,
+    # rank(Q) = rank(A)) has exactly-zero columns there.  For a tall
+    # request the eig side is V (returned vh); the wide path solves the
+    # transpose, so the swap lands it in u.  No injected zero-column
+    # vector (zero everywhere the request lives) may leak past the mask.
+    if m >= n:
+        assert np.linalg.norm(vh @ vh.T - np.eye(nmin)) < 1e-10
+    else:
+        assert np.linalg.norm(u.T @ u - np.eye(nmin)) < 1e-10
+        assert np.linalg.norm(vh[:rank] @ vh[:rank].T
+                              - np.eye(rank)) < 1e-10
+    # spectrum and reconstruction match the direct (unpadded) solve
+    ref = np.linalg.svd(np.asarray(a), compute_uv=False)
+    np.testing.assert_allclose(s, ref, atol=1e-10)
+    assert np.linalg.norm(np.asarray(a) - (u * s) @ vh) < 1e-10
+
+
+# --- the topk:<k> serving lane -----------------------------------------------
+
+
+def test_topk_mode_parse():
+    from repro.serve import topk_mode_k
+
+    assert topk_mode_k("topk:16") == 16
+    assert topk_mode_k("standard") is None
+    with pytest.raises(ValueError, match="topk"):
+        topk_mode_k("topk:0")
+    with pytest.raises(ValueError, match="topk"):
+        topk_mode_k("topk:banana")
+
+
+def test_topk_lane_end_to_end():
+    """topk:<k> requests batch in their own buckets and come back as
+    (m, k)/(k,)/(k, n) factors matching the dense leading spectrum."""
+    import repro.spectral as SP
+
+    svc = SvdService(ServiceConfig(batch_size=2, max_wait=0.0))
+    svc.warmup([(100, 40)], modes=("topk:4",))
+    tall = make_matrix(100, 40, 1e3, seed=3)
+    wide = make_matrix(30, 90, 1e3, seed=4)
+    f_tall = svc.submit(tall, mode="topk:4")
+    f_wide = svc.submit(wide, mode="topk:4")
+    svc.poll(force=True)
+    for a, fut in ((tall, f_tall), (wide, f_wide)):
+        u, s, vh = map(np.asarray, fut.result())
+        m, n = a.shape
+        assert u.shape == (m, 4) and s.shape == (4,)
+        assert vh.shape == (4, n)
+        ref = np.linalg.svd(np.asarray(a), compute_uv=False)[:4]
+        np.testing.assert_allclose(s, ref, atol=1e-10 * ref[0])
+    # distinct k at one rung = distinct bucket (k is a shape parameter)
+    key4 = svc.policy.key_for((100, 40), jnp.float64, "topk:4")
+    key8 = svc.policy.key_for((100, 40), jnp.float64, "topk:8")
+    assert key4 != key8
+
+
+def test_topk_lane_steady_state_zero_retraces():
+    svc = SvdService(ServiceConfig(batch_size=2, max_wait=0.0))
+    svc.warmup([(64, 32)], modes=("topk:4",))
+    for seed in range(4):
+        fut = svc.submit(make_matrix(60, 30, 1e3, seed=seed),
+                         mode="topk:4")
+        svc.poll(force=True)
+        fut.result()
+    st = svc.stats()
+    assert st["retraces"] == 0, st
+    assert st["solves"] == 4
+
+
+def test_topk_lane_validates_k():
+    svc = SvdService(ServiceConfig())
+    with pytest.raises(ValueError, match="triplets"):
+        svc.submit(jnp.zeros((16, 8)), mode="topk:12")
