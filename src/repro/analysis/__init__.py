@@ -1,0 +1,43 @@
+"""Static + trace-level invariant checks for the solver/serve/spectral
+stack.
+
+Two complementary layers:
+
+* :mod:`repro.analysis.lint` — a stdlib-only AST linter
+  (``python -m repro.analysis src/repro``) encoding the repo's
+  hand-learned invariants as ~6 precision-first rules (see
+  ``analysis/README.md`` for the catalog, each rule named with the
+  historical bug it guards against).
+* :mod:`repro.analysis.jaxpr_audit` — lowers a plan's traceable impls
+  and walks the jaxpr: psum count/axes per grouped iteration, f64
+  discipline under ``compute_dtype``, no host callbacks.  Surfaced as
+  ``SvdPlan.audit()`` / ``TopKPlan.audit()`` and the
+  ``REPRO_AUDIT_PLANS=1`` pytest fixture.
+
+The lint layer never imports jax (it runs in the bare CI job); import
+the audit layer explicitly where a live plan exists.
+"""
+
+from repro.analysis.lint.engine import (  # noqa: F401
+    FileContext,
+    Finding,
+    LintResult,
+    Rule,
+    all_rules,
+    load_baseline,
+    register_rule,
+    run_lint,
+    write_baseline,
+)
+
+__all__ = [
+    "FileContext",
+    "Finding",
+    "LintResult",
+    "Rule",
+    "all_rules",
+    "load_baseline",
+    "register_rule",
+    "run_lint",
+    "write_baseline",
+]

@@ -1,0 +1,11 @@
+"""AST lint layer: engine + built-in rules (stdlib-only, no jax)."""
+
+from repro.analysis.lint.engine import (  # noqa: F401
+    FileContext,
+    Finding,
+    LintResult,
+    Rule,
+    all_rules,
+    register_rule,
+    run_lint,
+)

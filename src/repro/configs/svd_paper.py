@@ -46,6 +46,9 @@ QR_CPU_SHAPES = [(1_536, 768), (3_072, 1_536)]
 def synthesize(name: str, *, cpu_size: bool = True, dtype=np.float64,
                seed: int = 0) -> np.ndarray:
     """Dense synthetic stand-in with matched n (or cpu_n) and kappa_2."""
+    if name not in MATRICES:
+        raise ValueError(f"unknown paper matrix {name!r}; known: "
+                         f"{sorted(MATRICES)}")
     cfg = MATRICES[name]
     n = cfg.cpu_n if cpu_size else cfg.n
     rng = np.random.default_rng(seed + hash(name) % (2 ** 16))

@@ -30,7 +30,9 @@ def eigh(h):
 def round_robin_schedule(b: int) -> np.ndarray:
     """Tournament schedule: (b-1) rounds x (b/2) disjoint pairs covering all
     unordered pairs of {0..b-1}.  b must be even."""
-    assert b % 2 == 0
+    if b % 2 != 0:
+        raise ValueError(f"tournament schedule needs an even block "
+                         f"count; got b={b}")
     players = list(range(b))
     rounds = []
     for _ in range(b - 1):
@@ -58,7 +60,11 @@ def block_jacobi_eigh(h, nb: int = 32, max_sweeps: int = 12, tol=None):
     """
     n = h.shape[-1]
     dtype = h.dtype
-    assert n % nb == 0 and (n // nb) % 2 == 0
+    if n % nb != 0 or (n // nb) % 2 != 0:
+        raise ValueError(
+            f"block_jacobi_eigh needs n divisible by nb with an even "
+            f"block count; got n={n}, nb={nb} — use "
+            f"padded_block_jacobi_eigh for arbitrary n")
     b = n // nb
     sched = jnp.asarray(round_robin_schedule(b))  # (rounds, pairs, 2)
     nrounds = sched.shape[0]
@@ -78,13 +84,16 @@ def block_jacobi_eigh(h, nb: int = 32, max_sweeps: int = 12, tol=None):
             rows, row_ids[:, None, :].repeat(2 * nb, axis=1), axis=2)
         sub = 0.5 * (sub + jnp.swapaxes(sub, -1, -2))
         _, j = jnp.linalg.eigh(sub)  # (npairs, 2nb, 2nb)
+        acc = jnp.promote_types(dtype, jnp.float32)
         # row phase: rows <- J^T rows
-        rows_new = jnp.einsum("pij,pin->pjn", j, rows)
+        rows_new = jnp.einsum("pij,pin->pjn", j, rows,
+                              preferred_element_type=acc).astype(dtype)
         h = h.at[row_ids.reshape(-1), :].set(rows_new.reshape(-1, n))
         # column phase: cols <- cols J
         cols = h[:, row_ids.reshape(-1)].reshape(n, -1, 2 * nb)
         cols = jnp.swapaxes(cols, 0, 1)  # (npairs, n, 2nb)
-        cols_new = jnp.einsum("pni,pij->pnj", cols, j)
+        cols_new = jnp.einsum("pni,pij->pnj", cols, j,
+                              preferred_element_type=acc).astype(dtype)
         h = h.at[:, row_ids.reshape(-1)].set(
             jnp.swapaxes(cols_new, 0, 1).reshape(n, -1))
         # accumulate eigenvectors: V <- V J (column op)

@@ -64,7 +64,9 @@ def _qdwh_chol_iter(x, a, b, c):
     """Cholesky iteration (eq. 4): Z = I + c X^T X, X+ = (b/c)X + (a-b/c) X Z^{-1}."""
     n = x.shape[-1]
     dtype = x.dtype
-    g = jnp.einsum("...mk,...mn->...kn", x, x)
+    g = jnp.einsum("...mk,...mn->...kn", x, x,
+                   preferred_element_type=jnp.promote_types(
+                       dtype, jnp.float32)).astype(dtype)
     z = c.astype(dtype) * g + jnp.eye(n, dtype=dtype)
     l = jnp.linalg.cholesky(z)
     # W = Z^{-1} X^T via two triangular solves.

@@ -107,8 +107,12 @@ def structured_qr_factor(x, sqrt_c, block: int = 32):
     """
     m, n = x.shape
     dtype = x.dtype
-    assert n % block == 0, "pad n to a multiple of the panel width"
-    assert m >= n, "structured QR expects a tall X"
+    if n % block != 0:
+        raise ValueError(f"structured QR needs n padded to a multiple "
+                         f"of the panel width: n={n}, block={block}")
+    if m < n:
+        raise ValueError(f"structured QR expects a tall X; got "
+                         f"({m}, {n})")
     npanels = n // block
     nb = block
     win = m + nb

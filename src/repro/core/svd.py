@@ -449,11 +449,14 @@ def jacobi_svd(a, nb: int = 32, max_sweeps: int = 16, tol=None):
              q[:, None] * nb + jnp.arange(nb)[None, :]], axis=1)
         flat = col_ids.reshape(-1)
         blocks = x[:, flat].reshape(m, -1, 2 * nb).swapaxes(0, 1)
-        gram = jnp.einsum("pmi,pmj->pij", blocks, blocks)
+        acc = jnp.promote_types(dtype, jnp.float32)
+        gram = jnp.einsum("pmi,pmj->pij", blocks, blocks,
+                          preferred_element_type=acc).astype(dtype)
         _, j = jnp.linalg.eigh(gram)
         # descending eigenvalue order keeps big columns first (stability)
         j = j[:, :, ::-1]
-        blocks_new = jnp.einsum("pmi,pij->pmj", blocks, j)
+        blocks_new = jnp.einsum("pmi,pij->pmj", blocks, j,
+                                preferred_element_type=acc).astype(dtype)
         x = x.at[:, flat].set(blocks_new.swapaxes(0, 1).reshape(m, -1))
         vblocks = v[:, flat].reshape(n, -1, 2 * nb).swapaxes(0, 1)
         vnew = jnp.einsum("pni,pij->pnj", vblocks, j)

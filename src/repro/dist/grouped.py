@@ -194,10 +194,15 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
         # sep axis is a real distribution (not replication): each device
         # holds 1/sep of the rows, so its Gram input — and its O(m n /
         # sep) memory — shrinks with the group size.
-        assert x.shape == (m_pad // nsep, n), \
-            (x.shape, m_pad, nsep, "iterate not row-sharded over 'sep'")
-        assert c_grp.shape == (len(sched), 1) == a_grp.shape, \
-            (c_grp.shape, "coefficients not split over 'zolo'")
+        if x.shape != (m_pad // nsep, n):
+            raise AssertionError(
+                f"iterate not row-sharded over 'sep': per-device shape "
+                f"{x.shape}, expected ({m_pad // nsep}, {n}) "
+                f"(m_pad={m_pad}, sep={nsep})")
+        if not (c_grp.shape == (len(sched), 1) == a_grp.shape):
+            raise AssertionError(
+                f"coefficients not split over 'zolo': got {c_grp.shape}/"
+                f"{a_grp.shape}, expected ({len(sched)}, 1)")
         # exactly one group carries X into the combine psum (exact — no
         # 1/r rescale rounding), every group adds its weighted term;
         # the engine's loop does the rest through the collective bundle
@@ -273,8 +278,11 @@ def grouped_zolo_pd_dynamic(a, *, mesh: Mesh, r: Optional[int] = None,
                        out_specs=(x_spec, P(), P(), P()),
                        check_rep=False)
     def run(x):
-        assert x.shape == (m_pad // nsep, n), \
-            (x.shape, m_pad, nsep, "iterate not row-sharded over 'sep'")
+        if x.shape != (m_pad // nsep, n):
+            raise AssertionError(
+                f"iterate not row-sharded over 'sep': per-device shape "
+                f"{x.shape}, expected ({m_pad // nsep}, {n}) "
+                f"(m_pad={m_pad}, sep={nsep})")
         xw = (jax.lax.axis_index("zolo") == 0).astype(coeff_dtype)
         ops = _group_ops(has_sep, xw, combine_kernel)
         if l is None:

@@ -65,7 +65,10 @@ def flash_attention_kernel_call(q, k, v, *, bq: int = 256, bk: int = 256,
     """Causal attention.  q, k, v: (bh, s, d) with bh = batch*heads
     (GQA pre-expanded by the wrapper).  Returns (bh, s, d) in q.dtype."""
     bh, s, d = q.shape
-    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    if s % bq != 0 or s % bk != 0:
+        raise ValueError(
+            f"flash_attention_kernel_call needs a tile-divisible "
+            f"sequence: got s={s} with bq={bq}, bk={bk}")
     scale = 1.0 / math.sqrt(d)
     n_q = s // bq
     n_k = s // bk

@@ -53,7 +53,11 @@ def gram_kernel_call(a, c, *, bn: int = 256, bk: int = 512,
     ``ops.py``; this entry requires exact divisibility.
     """
     m, n = a.shape
-    assert n % bn == 0 and m % bk == 0, (m, n, bn, bk)
+    if n % bn != 0 or m % bk != 0:
+        raise ValueError(
+            f"gram_kernel_call needs tile-divisible shapes: got "
+            f"({m}, {n}) with bn={bn}, bk={bk} — pad through "
+            f"kernels.ops.gram instead")
     n_k = m // bk
     c_arr = jnp.asarray(c, jnp.float32).reshape(1)
 

@@ -47,8 +47,15 @@ def grouped_combine_kernel_call(x, t, a, mhat, xw, *, bm: int = 256,
     """
     m, n = x.shape
     r = t.shape[0]
-    assert t.shape == (r, m, n)
-    assert m % bm == 0 and n % bn == 0
+    if t.shape != (r, m, n):
+        raise ValueError(
+            f"grouped_combine_kernel_call: terms shape {t.shape} does "
+            f"not stack x's {(m, n)} over r={r}")
+    if m % bm != 0 or n % bn != 0:
+        raise ValueError(
+            f"grouped_combine_kernel_call needs tile-divisible shapes: "
+            f"got ({m}, {n}) with bm={bm}, bn={bn} — pad through "
+            f"kernels.ops.grouped_combine instead")
     a_arr = jnp.asarray(a, jnp.float32)
     s_arr = jnp.stack([jnp.asarray(mhat, jnp.float32).reshape(()),
                        jnp.asarray(xw, jnp.float32).reshape(())])

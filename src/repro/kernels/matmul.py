@@ -36,7 +36,14 @@ def matmul_kernel_call(a, b, alpha=1.0, *, bm: int = 256, bn: int = 256,
     """C = alpha * A @ B.  a: (m, k); b: (k, n) -> f32 (m, n)."""
     m, kk = a.shape
     k2, n = b.shape
-    assert kk == k2 and m % bm == 0 and n % bn == 0 and kk % bk == 0
+    if kk != k2:
+        raise ValueError(
+            f"matmul_kernel_call: inner dims disagree ({kk} vs {k2})")
+    if m % bm != 0 or n % bn != 0 or kk % bk != 0:
+        raise ValueError(
+            f"matmul_kernel_call needs tile-divisible shapes: got "
+            f"({m}, {kk}) @ ({k2}, {n}) with bm={bm}, bn={bn}, bk={bk} "
+            f"— pad through kernels.ops.matmul instead")
     n_k = kk // bk
     alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1)
     grid = (m // bm, n // bn, n_k)

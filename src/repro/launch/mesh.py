@@ -23,7 +23,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     devices = jax.devices()
     if len(devices) == need:
         return jax.make_mesh(shape, axes)
-    assert len(devices) >= need, (len(devices), need)
+    if len(devices) < need:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {need} devices; only "
+            f"{len(devices)} available")
     arr = np.asarray(devices[:need]).reshape(shape)
     return jax.sharding.Mesh(arr, axes)
 

@@ -102,16 +102,30 @@ class ModelConfig:
             (self.window is not None)
 
     def validate(self) -> "ModelConfig":
+        def need(ok: bool, what: str):
+            if not ok:
+                raise ValueError(f"ModelConfig {self.name!r}: {what}")
+
         if "attn" in self.block_pattern:
-            assert self.num_heads * self.head_dim > 0
-            assert self.num_heads % max(self.num_kv_heads, 1) == 0
+            need(self.num_heads * self.head_dim > 0,
+                 f"attn blocks need num_heads ({self.num_heads}) and "
+                 f"head_dim ({self.head_dim}) > 0")
+            need(self.num_heads % max(self.num_kv_heads, 1) == 0,
+                 f"num_heads ({self.num_heads}) must divide evenly by "
+                 f"num_kv_heads ({self.num_kv_heads})")
         if "ssd" in self.block_pattern:
-            assert self.d_inner % self.ssm_head_dim == 0
+            need(self.d_inner % self.ssm_head_dim == 0,
+                 f"d_inner ({self.d_inner}) must be a multiple of "
+                 f"ssm_head_dim ({self.ssm_head_dim})")
         if "rglru" in self.block_pattern:
-            assert self.rnn_width > 0
+            need(self.rnn_width > 0,
+                 f"rglru blocks need rnn_width > 0 (got {self.rnn_width})")
         if self.num_experts:
-            assert self.moe_top_k > 0
-        assert self.num_layers >= len(self.block_pattern)
+            need(self.moe_top_k > 0,
+                 f"MoE needs moe_top_k > 0 (got {self.moe_top_k})")
+        need(self.num_layers >= len(self.block_pattern),
+             f"num_layers ({self.num_layers}) shorter than the block "
+             f"pattern ({len(self.block_pattern)})")
         return self
 
 

@@ -195,7 +195,12 @@ class ZoloMuon:
         mu_leaves = jax.tree.leaves(state["mu"])
         nu_leaves = jax.tree.leaves(state["nu"])
         flags = jax.tree.leaves(self.labels)
-        assert len(p_leaves) == len(g_leaves) == len(flags)
+        if not (len(p_leaves) == len(g_leaves) == len(flags)):
+            raise ValueError(
+                f"params/grads/labels trees disagree: "
+                f"{len(p_leaves)} params, {len(g_leaves)} grads, "
+                f"{len(flags)} labels — was the optimizer built for a "
+                f"different model structure?")
 
         new_p, new_mu, new_nu = [], [], []
         for is_muon, p, g, mu, nu in zip(flags, p_leaves, g_leaves,

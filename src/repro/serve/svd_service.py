@@ -51,6 +51,7 @@ import jax.numpy as jnp
 
 import repro.solver as _solver
 import repro.spectral as _spectral
+from repro.analysis import jaxpr_audit as _audit
 from repro.serve.bucketing import (
     BucketKey,
     BucketPolicy,
@@ -115,6 +116,12 @@ class ServiceConfig:
                  matrix per device when batch_size % ndev == 0) — the
                  multi-device serving layout; None keeps single-device
                  dispatch.
+    audit_plans  jaxpr-audit every bucket plan at warmup
+                 (:func:`repro.analysis.jaxpr_audit.audit_plan`): a plan
+                 with a wrong collective structure, an f64 leak, or a
+                 host callback fails *before* it serves traffic.
+                 ``stats()["plan_audits"]`` reports the counters either
+                 way.
     """
 
     batch_size: int = 4
@@ -126,6 +133,7 @@ class ServiceConfig:
     method: str = "auto"
     data_axis: Optional[Tuple[Any, ...]] = None
     max_wait_overrides: Tuple[Tuple[str, float], ...] = ()
+    audit_plans: bool = False
 
     def mode_kappa(self, mode: str) -> float:
         # the partial-spectrum lane rides the "standard" accuracy hint:
@@ -240,6 +248,9 @@ class SvdService:
         self._cache_base = _solver.cache_stats()
         self._trace_base = _solver.trace_count()
         self._topk_trace_base = _spectral.trace_count()
+        # audit counters are NOT re-baselined by warmup: warmup is where
+        # the audits run, and stats() should report them
+        self._audit_base = _audit.audit_stats()
         self._wait_overrides = {str(t): float(w)
                                 for t, w in config.max_wait_overrides}
         self._warm: List[BucketKey] = []
@@ -288,6 +299,12 @@ class SvdService:
                         continue
                     keys.append(key)
                     plan = self._bucket_plan(key)
+                    if self.config.audit_plans:
+                        # fail loud at warmup, not under traffic: the
+                        # graph invariants (psum structure, dtype
+                        # discipline, no callbacks) are checked on the
+                        # exact impl the bucket will serve
+                        plan.audit()
                     zeros = jnp.zeros(
                         (self.config.batch_size, key.m_pad, key.n_pad),
                         jnp.dtype(key.dtype))
@@ -446,6 +463,9 @@ class SvdService:
             "retraces": (_solver.trace_count() - self._trace_base
                          + _spectral.trace_count()
                          - self._topk_trace_base),
+            "plan_audits": {
+                k: _audit.audit_stats()[k] - self._audit_base[k]
+                for k in ("audited", "passed", "failed")},
             "warm_buckets": list(self._warm),
             "inflight": len(self._inflight),
             "pending": self._sched.pending(),

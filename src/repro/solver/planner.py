@@ -471,6 +471,17 @@ class SvdPlan:
                                           **comm_kw))
         return flops / max(r, 1) if grouped else flops
 
+    def audit(self, *, raise_on_fail: bool = True):
+        """Lower the plan's traceable impl and walk the jaxpr for graph
+        invariants: psum count/axes per grouped iteration (the PR 4
+        double-reduction class), f64 discipline under ``compute_dtype``,
+        and no host callbacks.  Returns an
+        :class:`repro.analysis.jaxpr_audit.AuditReport`; raises
+        ``AuditError`` on violations unless ``raise_on_fail=False``."""
+        from repro.analysis import jaxpr_audit as _audit
+
+        return _audit.audit_plan(self, raise_on_fail=raise_on_fail)
+
     def __repr__(self):
         sep = f"sep={self.sep}, " if self.mode == "grouped" else ""
         return (f"SvdPlan(method={self.method!r}, mode={self.mode!r}, "

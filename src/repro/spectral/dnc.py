@@ -142,7 +142,9 @@ def dnc_topk(a, *, k: int, l: int, key, sign_fn, small_svd,
     # Spectral projector -> orthonormal window basis -> Rayleigh-Ritz.
     p = 0.5 * (q_sign + jnp.eye(n, dtype=dtype))
     g = jax.random.normal(key, a.shape[:-2] + (n, l), dtype=dtype)
-    v1 = cholesky_qr2(jnp.einsum("...mn,...nl->...ml", p, g))
+    v1 = cholesky_qr2(jnp.einsum("...mn,...nl->...ml", p, g,
+                                 preferred_element_type=jnp.promote_types(
+                                     dtype, jnp.float32)).astype(dtype))
     b = jnp.einsum("...mn,...nl->...ml", a, v1)
     u_b, s, vh_b = small_svd(b)
     u = u_b[..., :, :k]

@@ -108,9 +108,14 @@ def randomized_range(a, l: int, q_iters: int, key, kind: str = "gauss"):
     sketch = srht_sketch if kind == "srht" else gaussian_sketch
     y = sketch(a, l, key)
     q = cholesky_qr2(y)
+    acc = jnp.promote_types(a.dtype, jnp.float32)
     for _ in range(int(q_iters)):
-        z = cholesky_qr2(jnp.einsum("...mn,...ml->...nl", a, q))
-        q = cholesky_qr2(jnp.einsum("...mn,...nl->...ml", a, z))
+        z = cholesky_qr2(jnp.einsum("...mn,...ml->...nl", a, q,
+                                    preferred_element_type=acc)
+                         .astype(a.dtype))
+        q = cholesky_qr2(jnp.einsum("...mn,...nl->...ml", a, z,
+                                    preferred_element_type=acc)
+                         .astype(a.dtype))
     return q
 
 

@@ -173,6 +173,15 @@ class TopKPlan:
     def flops_estimate(self) -> Optional[float]:
         return self.decision.get(f"{self.strategy}_flops")
 
+    def audit(self, *, raise_on_fail: bool = True):
+        """Lower the whole top-k graph (sketch/d&c + inner solver plans,
+        inlined) and walk the jaxpr: the batched path owes the mesh NO
+        collectives, no f64 compute under an f32 plan, no host
+        callbacks.  See :func:`repro.analysis.jaxpr_audit.audit_plan`."""
+        from repro.analysis import jaxpr_audit as _audit
+
+        return _audit.audit_plan(self, raise_on_fail=raise_on_fail)
+
     # --- traceable implementation -------------------------------------
 
     def _impl_canonical(self, a):

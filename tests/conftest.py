@@ -29,6 +29,25 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(scope="session", autouse=True)
+def audit_plans_at_teardown():
+    """Opt-in jaxpr audit of every plan the suite built.
+
+    With ``REPRO_AUDIT_PLANS=1`` (the CI jaxpr-audit job), session
+    teardown walks the solver and spectral plan caches through
+    ``repro.analysis.jaxpr_audit.audit_all_plans`` — whatever graphs the
+    tests exercised get their psum/dtype/callback invariants checked for
+    free, without each test opting in.
+    """
+    yield
+    if os.environ.get("REPRO_AUDIT_PLANS") != "1":
+        return
+    from repro.analysis.jaxpr_audit import audit_all_plans
+
+    failures = audit_all_plans(raise_on_fail=False)
+    assert not failures, f"plan audits failed at session end: {failures}"
+
+
 def run_multidevice_script(script: str, marker: str, *, devices: int = 8,
                            timeout: int = 600) -> None:
     """Run ``script`` in a subprocess with ``devices`` virtual host devices
