@@ -11,6 +11,16 @@ p50/p99 latency, pad-waste fraction, plan-cache hit rate per cell (the
 hit rate is 1.0 and retraces 0 in every cell — the warmed steady state
 the service tests assert).
 
+Two PR 9 sections ride along:
+
+* ``verify_overhead`` — the same burst workload with ``verify`` off
+  vs on: the in-graph health check's cost in solves/s
+  (``overhead_frac``; the acceptance bar is < 5%).
+* ``fault_axis`` — solves/s vs injected NaN fault rate
+  (``ServiceFaults.nan_request_seqs``): each faulted request fails its
+  rung-0 health check and recovers up the escalation ladder, and the
+  record shows retries == faults with zero quarantines.
+
 CPU rows prove the serving machinery and its overheads; a TPU run of
 this same file regenerates honest wall-clock.
 
@@ -21,6 +31,7 @@ from __future__ import annotations
 
 import json
 import os
+from dataclasses import replace as dataclass_replace
 
 from benchmarks.common import emit
 
@@ -30,13 +41,23 @@ BATCH_SIZES = (2, 4, 8)
 RATES = (100.0, 400.0)
 SHAPES = ((96, 64), (120, 80), (64, 48), (40, 100))
 MODES = ("fast", "standard")
+# the stream stays inside every mode's accuracy contract (true kappa
+# <= the "fast" hint of 1e2): out-of-contract requests legitimately
+# fail their eps-level health check and escalate, which would measure
+# ladder retries, not the in-graph check this record prices
+KAPPA = 1e2
+# throughput-bound arrival rate for the overhead/fault sections: every
+# request arrives at t=0, so solves/s measures the service, not the
+# Poisson clock
+BURST_RATE = 1e6
+FAULT_RATES = (0.125, 0.25)
 
 
 def run():
     import jax.numpy as jnp
 
     from repro.launch.svd_serve import run_workload
-    from repro.serve import ServiceConfig, SvdService
+    from repro.serve import ServiceConfig, ServiceFaults, SvdService
 
     records = []
     for batch in BATCH_SIZES:
@@ -45,7 +66,7 @@ def run():
                                                max_wait=0.005))
             rec = run_workload(service, SHAPES, modes=MODES,
                                requests=REQUESTS, rate=rate,
-                               kappa=1e3, dtype=jnp.float64, seed=0)
+                               kappa=KAPPA, dtype=jnp.float64, seed=0)
             rec["batch_size"] = batch
             records.append(rec)
             emit(f"serve.b{batch}.rate{rate:.0f}",
@@ -54,6 +75,73 @@ def run():
                  f"p50={rec['p50_ms']:.1f}ms p99={rec['p99_ms']:.1f}ms "
                  f"waste={rec['pad_waste']:.2f} "
                  f"hit={rec['plan_cache_hit_rate']:.2f}")
+
+    # --- verification overhead: verified vs unverified solves/s -------
+    def burst(config, fault_rate=0.0, repeats=3, requests=REQUESTS):
+        # best-of-N: the first repeat eats one-time executable compiles
+        # (retry lanes only exist after the first injected fault) and a
+        # single ~0.3 s burst is noise-bound on CPU; the max is the
+        # steady-state rate the overhead comparison needs
+        best = None
+        for _ in range(repeats):
+            rec = run_workload(SvdService(config), SHAPES, modes=MODES,
+                               requests=requests, rate=BURST_RATE,
+                               kappa=KAPPA, dtype=jnp.float64, seed=0)
+            if best is None or rec["solves_per_s"] > best["solves_per_s"]:
+                best = rec
+        best["fault_rate"] = fault_rate
+        best["batch_size"] = config.batch_size
+        return best
+
+    # a longer stream for the A/B pair (resolving a few-percent delta
+    # needs more than a quarter-second of wall-clock per side), scored
+    # as the median of per-round paired ratios with the order
+    # alternating between rounds: pairing cancels slow machine drift
+    # across the benchmark's minutes of sustained load, alternation
+    # cancels first-vs-second position bias within a round (allocator
+    # and cache state left by one burst taxes whichever runs next)
+    base = ServiceConfig(batch_size=4, max_wait=0.005)
+    plain = checked = None
+    ratios = []
+    for round_i in range(6):
+        cfgs = [(False, dataclass_replace(base, verify=False)),
+                (True, base)]
+        if round_i % 2:
+            cfgs.reverse()
+        rate_of = {}
+        for is_verified, cfg in cfgs:
+            rec = burst(cfg, repeats=1, requests=4 * REQUESTS)
+            rate_of[is_verified] = rec
+        p, c = rate_of[False], rate_of[True]
+        ratios.append(c["solves_per_s"] / p["solves_per_s"])
+        if plain is None or p["solves_per_s"] > plain["solves_per_s"]:
+            plain = p
+        if checked is None or c["solves_per_s"] > checked["solves_per_s"]:
+            checked = c
+    overhead = 1.0 - sorted(ratios)[len(ratios) // 2]
+    verify_overhead = {
+        "unverified_solves_per_s": plain["solves_per_s"],
+        "verified_solves_per_s": checked["solves_per_s"],
+        "paired_ratios": ratios,
+        "overhead_frac": overhead,
+    }
+    emit("serve.verify_overhead", 0.0,
+         f"unverified={plain['solves_per_s']:.1f}/s "
+         f"verified={checked['solves_per_s']:.1f}/s "
+         f"overhead={overhead * 100:.1f}%")
+
+    # --- fault axis: injected NaN solves recovered up the ladder ------
+    fault_records = [checked]
+    for frate in FAULT_RATES:
+        stride = max(1, round(1.0 / frate))
+        seqs = tuple(range(0, REQUESTS, stride))
+        cfg = dataclass_replace(
+            base, faults=ServiceFaults(nan_request_seqs=seqs))
+        rec = burst(cfg, fault_rate=len(seqs) / REQUESTS)
+        fault_records.append(rec)
+        emit(f"serve.faults{frate:.3f}", 1e6 / rec["solves_per_s"],
+             f"{rec['solves_per_s']:.1f}/s retries={rec['retries']} "
+             f"quarantined={rec['quarantined']} ok={rec['ok']}")
 
     with open(BENCH_JSON, "w") as f:
         json.dump({
@@ -66,6 +154,8 @@ def run():
                     "serving machinery — regenerate on TPU for honest "
                     "wall-clock",
             "records": records,
+            "verify_overhead": verify_overhead,
+            "fault_axis": fault_records,
         }, f, indent=1)
     emit("serve.json_record", 0.0, BENCH_JSON)
 

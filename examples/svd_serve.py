@@ -45,7 +45,11 @@ def main():
         m, n = shapes[int(rng.integers(len(shapes)))]
         dtype = (jnp.float64, jnp.float32)[int(rng.integers(2))]
         mode = ("fast", "standard")[int(rng.integers(2))]
-        a = synth_matrix(m, n, kappa=1e3, seed=i, dtype=dtype)
+        # stay inside the "fast" mode's kappa-1e2 accuracy contract:
+        # out-of-contract requests fail their runtime health check and
+        # escalate (correct, but then the stream compiles retry lanes
+        # and the zero-retrace claim above would not hold)
+        a = synth_matrix(m, n, kappa=1e2, seed=i, dtype=dtype)
         reqs.append((a, mode))
         futs.append(svc.submit(a, mode))   # non-blocking
     svc.poll(force=True)                   # dispatch everything queued

@@ -47,7 +47,9 @@ def scaled_newton_pd(a, *, max_iters: int = 30, eps=None, want_h: bool = True):
             jnp.zeros_like(a), jnp.int32(0), jnp.asarray(1.0, dtype))
     x, _, k, res = jax.lax.while_loop(cond, body, init)
     info = PolarInfo(iterations=k, residual=res,
-                     l_final=jnp.asarray(1.0, jnp.float32))
+                     l_final=jnp.asarray(1.0, jnp.float32),
+                     converged=res <= tol,
+                     l_init=jnp.asarray(float("nan"), jnp.float32))
     if want_h:
         return x, form_h(x, a), info
     return x, None, info

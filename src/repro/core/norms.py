@@ -141,6 +141,12 @@ def sigma_min_lower_qr(x, iters: int = 12, safety: float = 0.5):
     mu = jnp.linalg.norm(solve(v), axis=-1)  # ~ 1 / sigma_min^2
     sig = 1.0 / jnp.sqrt(jnp.maximum(mu, jnp.finfo(dtype).tiny))
     eps = jnp.finfo(dtype).eps
+    # an exactly singular R (every zero-padded serving slot) sends the
+    # triangular solves to inf/NaN, and NaN would otherwise propagate
+    # straight through maximum() into the Zolotarev coefficients; the
+    # honest lower bound there is the floor itself (f(0) = 0 keeps the
+    # null block exact through the iteration)
+    sig = jnp.where(jnp.isfinite(sig), sig, jnp.asarray(0.0, dtype))
     return jnp.maximum(safety * sig, 4 * eps)
 
 

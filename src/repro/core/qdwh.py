@@ -27,11 +27,28 @@ from repro.core import norms as _norms
 
 
 class PolarInfo(NamedTuple):
-    """Convergence record; a NamedTuple so compiled (jit) plans return it."""
+    """Convergence record; a NamedTuple so compiled (jit) plans return it.
+
+    ``converged`` is the runtime verdict the resilience layer keys on: a
+    dynamic driver's ``while_loop`` can exit at the iteration cap with
+    the residual rule unmet, and before this flag existed that exit was
+    silent (the factors just carried reduced accuracy — or NaN — out).
+    Static trace-time schedules are converged by construction (their
+    depth was sized from l0 at plan time).  ``l_init`` records the
+    sigma_min lower bound the solve actually ran under — the runtime
+    analogue of the plan's kappa hint (kappa_est = 1/l_init), NaN when
+    the driver has no bound (Newton, the SVD oracle, a schedule-only
+    static call).
+    """
 
     iterations: jnp.ndarray  # scalar int32
     residual: jnp.ndarray  # final ||X2 - X1||_F / ||X2||_F
     l_final: jnp.ndarray
+    # Python-scalar defaults (not jnp arrays: no device work at class
+    # definition) keep three-field construction by out-of-tree backends
+    # valid; every in-repo driver sets both explicitly.
+    converged: jnp.ndarray = True  # scalar bool: stopping rule met
+    l_init: jnp.ndarray = float("nan")  # f32 entry bound; NaN unknown
 
 
 def _eps_for(dtype) -> float:
@@ -91,11 +108,11 @@ def qdwh_pd(a, *, alpha=None, l=None, max_iters: int = 12,
     tol = eps ** (1.0 / 3.0)
 
     def cond(state):
-        x, _, l, k, res = state
+        x, _, l, k, res, _ = state
         return jnp.logical_and(k < max_iters, res > tol)
 
     def body(state):
-        x, _, l, k, _ = state
+        x, _, l, k, _, _ = state
         ca, cb, cc = _coeffs.qdwh_coeffs(l)
         x_new = jax.lax.cond(
             cc > chol_switch,
@@ -105,12 +122,13 @@ def qdwh_pd(a, *, alpha=None, l=None, max_iters: int = 12,
         res = _norms.frobenius(x_new - x) / jnp.maximum(
             _norms.frobenius(x_new), jnp.finfo(dtype).tiny)
         l_new = jnp.clip(_coeffs.qdwh_l_update(l, ca, cb, cc), 0.0, 1.0)
-        return x_new, x, l_new, k + 1, res
+        return x_new, x, l_new, k + 1, res, res <= tol
 
     init = (x0, jnp.zeros_like(x0), l0.astype(jnp.result_type(l0, 0.0)),
-            jnp.int32(0), jnp.asarray(1.0, dtype))
-    x, _, l_fin, k, res = jax.lax.while_loop(cond, body, init)
-    info = PolarInfo(iterations=k, residual=res, l_final=l_fin)
+            jnp.int32(0), jnp.asarray(1.0, dtype), jnp.asarray(False))
+    x, _, l_fin, k, res, conv = jax.lax.while_loop(cond, body, init)
+    info = PolarInfo(iterations=k, residual=res, l_final=l_fin,
+                     converged=conv, l_init=l0.astype(jnp.float32))
     if want_h:
         return x, form_h(x, a), info
     return x, None, info
@@ -149,7 +167,10 @@ def qdwh_pd_static(a, *, l0: Optional[float] = None, max_iters: int = 8,
             x = _qdwh_chol_iter(x, fa, fb, fc)
     info = PolarInfo(iterations=jnp.int32(len(sched)),
                      residual=jnp.asarray(0.0, a.dtype),
-                     l_final=jnp.asarray(sched[-1][3], jnp.float32))
+                     l_final=jnp.asarray(sched[-1][3], jnp.float32),
+                     converged=jnp.asarray(True),
+                     l_init=jnp.asarray(float(l0) if l0 is not None
+                                        else float("nan"), jnp.float32))
     if want_h:
         return x, form_h(x, a), info
     return x, None, info

@@ -104,6 +104,13 @@ class PolarSpec:
     # and static-kwarg binding (precomputed schedules) for SvdPlan
     flops_fn: Optional[Callable] = None  # (m, n, *, r, kappa) -> float
     plan_fn: Optional[Callable] = None   # (PlanResolution) -> dict
+    # resilience hooks (repro.resilience): the escalation ladder and the
+    # runtime health verdict consult these, never the name.
+    fallback: Optional[str] = None       # next-rung method when this
+                                         # backend's solve fails verification
+    kappa_max_f32: Optional[float] = None  # sub-f64 conditioning envelope;
+                                           # runtime kappa_est beyond it is
+                                           # judged unhealthy
     description: str = ""
 
 
@@ -141,6 +148,8 @@ def register_polar(name: str, *, supports_grouped: bool = False,
                    is_oracle: bool = False, baseline: bool = False,
                    grouped_fn: Callable = None,
                    flops_fn: Callable = None, plan_fn: Callable = None,
+                   fallback: Optional[str] = None,
+                   kappa_max_f32: Optional[float] = None,
                    description: str = ""):
     """Decorator registering ``fn(a, **kw) -> (q, h, info)`` under ``name``."""
 
@@ -153,12 +162,16 @@ def register_polar(name: str, *, supports_grouped: bool = False,
         if requires_mesh and not supports_grouped:
             raise ValueError(f"polar solver {name!r}: requires_mesh without "
                              f"supports_grouped is unsatisfiable")
+        if fallback == name:
+            raise ValueError(f"polar solver {name!r}: fallback to itself "
+                             f"would loop the escalation ladder")
         _POLAR[name] = PolarSpec(
             name=name, fn=fn, supports_grouped=supports_grouped,
             requires_mesh=requires_mesh, dynamic=dynamic,
             is_oracle=is_oracle, baseline=baseline,
             grouped_fn=grouped_fn,
             flops_fn=flops_fn, plan_fn=plan_fn,
+            fallback=fallback, kappa_max_f32=kappa_max_f32,
             description=description)
         return fn
 

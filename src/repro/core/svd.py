@@ -325,6 +325,7 @@ register_polar("zolo_grouped_dynamic", dynamic=True, supports_grouped=True,
 register_polar("zolo_pallas",
                flops_fn=_zolo_pallas_flops,
                plan_fn=_pallas_envelope_planfn(_zolo_static_planfn),
+               fallback="zolo_static", kappa_max_f32=PALLAS_F32_KAPPA_MAX,
                description="Pallas kernel-backed trace-time Zolo-PD "
                            "(fused Gram + r-term combine; compiled on "
                            "TPU, interpret mode elsewhere)")(
@@ -332,6 +333,7 @@ register_polar("zolo_pallas",
 register_polar("zolo_pallas_dynamic", dynamic=True,
                flops_fn=_zolo_pallas_dynamic_flops,
                plan_fn=_pallas_envelope_planfn(_zolo_dynamic_planfn),
+               fallback="zolo", kappa_max_f32=PALLAS_F32_KAPPA_MAX,
                description="Pallas kernel-backed dynamic Zolo-PD "
                            "(in-graph coefficients; the kernel hot "
                            "loops inside the while_loop — compiled on "
@@ -361,7 +363,9 @@ def _svd_oracle_polar(a, *, want_h: bool = True, **_):
     q = u @ vh
     h = (vh.swapaxes(-1, -2) * s[..., None, :]) @ vh if want_h else None
     info = _qdwh.PolarInfo(jnp.int32(0), jnp.asarray(0.0, a.dtype),
-                           jnp.asarray(1.0, jnp.float32))
+                           jnp.asarray(1.0, jnp.float32),
+                           jnp.asarray(True),
+                           jnp.asarray(float("nan"), jnp.float32))
     return q, h, info
 
 

@@ -148,7 +148,9 @@ def _chol_terms(x, c_odd, gram=None, *, ops: ZoloOps = DEFAULT_OPS):
     eye = jnp.eye(n, dtype=dtype)
     z = g[None] + c_odd[:, None, None].astype(dtype) * eye  # (r, n, n)
     l = jnp.linalg.cholesky(z)
-    xt = jnp.broadcast_to(jnp.swapaxes(x, -1, -2), (c_odd.shape[0],) + x.shape[:-2] + (n, x.shape[-2]))
+    xt = jnp.broadcast_to(
+        jnp.swapaxes(x, -1, -2),
+        (c_odd.shape[0],) + x.shape[:-2] + (n, x.shape[-2]))
     y = jax.lax.linalg.triangular_solve(l, xt, left_side=True, lower=True)
     w = jax.lax.linalg.triangular_solve(
         l, y, left_side=True, lower=True, transpose_a=True)
@@ -328,7 +330,11 @@ def run_dynamic(x0, l0, r: int, *, eps: float, max_iters: int = 8,
     bundle takes its group's slice) and residual norms through
     ``ops.fnorm`` (a distributed bundle all-reduces), so the SAME loop
     runs single-device, kernel-backed, and grouped.  Returns
-    ``(x, l_final, iterations, residual)``.
+    ``(x, l_final, iterations, residual, converged)``: ``converged`` is
+    carried through the loop state and records whether the residual
+    rule was met — an exit at ``max_iters`` with the rule unmet used to
+    be indistinguishable from convergence, which is exactly the silent
+    failure the resilience layer's verdicts key on.
     """
     dtype = x0.dtype
     tol = eps ** (1.0 / (2 * r + 1))
@@ -362,20 +368,21 @@ def run_dynamic(x0, l0, r: int, *, eps: float, max_iters: int = 8,
 
     # --- remaining iterations: shared-Gram Cholesky ------------------------
     def cond(state):
-        _, _, k, res = state
+        _, _, k, res, _ = state
         return jnp.logical_and(k < max_iters, res > tol)
 
     def body(state):
-        x, l, k, _ = state
+        x, l, k, _, _ = state
         c, av, mh = _coeffs.zolo_coeffs(l, r)
         c_sel, a_sel = ops.coeff_select(c[0::2], av)
         x_new = zolo_iteration(x, c_sel, a_sel, mh, mode="chol", ops=ops)
         res = ops.fnorm(x_new - x) / jnp.maximum(
             ops.fnorm(x_new), jnp.finfo(dtype).tiny)
         l_new = jnp.clip(_coeffs.zolo_l_update(l, c, mh), 0.0, 1.0 - eps)
-        return x_new, l_new, k + 1, res
+        return x_new, l_new, k + 1, res, res <= tol
 
-    return jax.lax.while_loop(cond, body, (x1, l1, jnp.int32(1), res1))
+    return jax.lax.while_loop(cond, body,
+                              (x1, l1, jnp.int32(1), res1, res1 <= tol))
 
 
 def zolo_pd_static(a, *, l0: Optional[float] = None,
@@ -416,7 +423,9 @@ def zolo_pd_static(a, *, l0: Optional[float] = None,
     src = a if hermitian_source is None else hermitian_source
     info = PolarInfo(iterations=jnp.int32(len(sched)),
                      residual=jnp.asarray(0.0, a.dtype),
-                     l_final=jnp.asarray(sched[-1].l_after, jnp.float32))
+                     l_final=jnp.asarray(sched[-1].l_after, jnp.float32),
+                     converged=jnp.asarray(True),
+                     l_init=jnp.asarray(sched[0].l_before, jnp.float32))
     if want_h:
         return x, form_h(x, src), info
     return x, None, info
@@ -450,10 +459,12 @@ def zolo_pd(a, r: int = 3, *, alpha=None, l=None, max_iters: int = 8,
     l0 = _norms.sigma_min_lower_qr(x0) if l is None else jnp.asarray(l)
     l0 = jnp.clip(l0, 4 * eps, 1.0 - eps)
     l0 = l0.astype(jnp.result_type(l0, 0.0))
-    x, l_fin, k, res = run_dynamic(x0, l0, r, eps=eps, max_iters=max_iters,
-                                   first_mode=first_mode,
-                                   hh_block=hh_block, ops=ops)
-    info = PolarInfo(iterations=k, residual=res, l_final=l_fin)
+    x, l_fin, k, res, conv = run_dynamic(x0, l0, r, eps=eps,
+                                         max_iters=max_iters,
+                                         first_mode=first_mode,
+                                         hh_block=hh_block, ops=ops)
+    info = PolarInfo(iterations=k, residual=res, l_final=l_fin,
+                     converged=conv, l_init=l0.astype(jnp.float32))
     if want_h:
         return x, form_h(x, a), info
     return x, None, info

@@ -217,7 +217,9 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
     if return_info:
         info = PolarInfo(iterations=jnp.int32(len(sched)),
                          residual=jnp.asarray(0.0, a.dtype),
-                         l_final=jnp.asarray(sched[-1].l_after, jnp.float32))
+                         l_final=jnp.asarray(sched[-1].l_after, jnp.float32),
+                         converged=jnp.asarray(True),
+                         l_init=jnp.asarray(sched[0].l_before, jnp.float32))
         return q, info
     return q
 
@@ -275,7 +277,7 @@ def grouped_zolo_pd_dynamic(a, *, mesh: Mesh, r: Optional[int] = None,
     # established by construction: every scalar derives from "sep"-psum
     # results and the iterate from the "zolo" combine psum.
     @functools.partial(shard_map, mesh=mesh, in_specs=(x_spec,),
-                       out_specs=(x_spec, P(), P(), P()),
+                       out_specs=(x_spec, P(), P(), P(), P(), P()),
                        check_rep=False)
     def run(x):
         if x.shape != (m_pad // nsep, n):
@@ -294,15 +296,21 @@ def grouped_zolo_pd_dynamic(a, *, mesh: Mesh, r: Optional[int] = None,
             l0 = jnp.asarray(l)
         l0 = jnp.clip(l0, 4 * eps_f, 1.0 - eps_f)
         l0 = l0.astype(jnp.result_type(l0, 0.0))
-        return _zolo.run_dynamic(x, l0, r, eps=eps_f, max_iters=max_iters,
-                                 first_mode=first_mode, ops=ops,
-                                 allow_householder=(nsep == 1))
+        out = _zolo.run_dynamic(x, l0, r, eps=eps_f, max_iters=max_iters,
+                                first_mode=first_mode, ops=ops,
+                                allow_householder=(nsep == 1))
+        # the runtime bound rides out with the engine's state: it is the
+        # in-graph analogue of the plan's kappa hint, and the resilience
+        # verdict checks it against the envelope the plan was admitted
+        # under (replicated: derived from "sep"-psum results)
+        return out + (l0.astype(jnp.float32),)
 
-    q, l_fin, k, res = run(x0)
+    q, l_fin, k, res, conv, l_used = run(x0)
     if m_pad != m:
         q = q[:m]
     if return_info:
-        return q, PolarInfo(iterations=k, residual=res, l_final=l_fin)
+        return q, PolarInfo(iterations=k, residual=res, l_final=l_fin,
+                            converged=conv, l_init=l_used)
     return q
 
 

@@ -91,6 +91,7 @@ def run_workload(service: SvdService,
     wall = time.perf_counter() - t0
 
     lats = np.asarray([f.latency for f in futs], float)
+    ok = sum(1 for f in futs if f.exception() is None)
     stats = service.stats()
     return {
         "requests": requests,
@@ -104,6 +105,16 @@ def run_workload(service: SvdService,
         "plan_cache_hit_rate": stats["plan_cache_hit_rate"],
         "retraces": stats["retraces"],
         "batches": stats["batches"],
+        # resilience counters (PR 9): a fault-free run reports zeros
+        # and ok == requests; a fault-injected run shows the recovery
+        # paths the stream exercised
+        "ok": ok,
+        "verify": service.config.verify,
+        "retries": stats["retries"],
+        "health_failures": stats["health_failures"],
+        "quarantined": stats["quarantined"],
+        "deadline_expired": stats["deadline_expired"],
+        "dispatch_errors": stats["dispatch_errors"],
     }
 
 

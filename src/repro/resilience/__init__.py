@@ -1,0 +1,47 @@
+"""Runtime breakdown detection and recovery.
+
+Three layers, each usable alone:
+
+* :mod:`repro.resilience.health` — in-graph :class:`SolveHealth` (one
+  extra Gram reduction per solve) and the host-side
+  :class:`HealthVerdict` that judges it.
+* :mod:`repro.resilience.escalate` — the deterministic escalation
+  ladder: re-plan one capability notch more conservative until a rung's
+  verdict passes, else raise :class:`SolveFailure` with the full trail.
+* :mod:`repro.resilience.faultinject` — deterministic fault injection
+  (NaN / indefinite-Gram ops bundles, serving fault plans) so the
+  recovery paths above are *tested* paths.
+
+See ``src/repro/resilience/README.md`` for the failure-mode -> recovery
+map and the serving-layer integration (:mod:`repro.serve`).
+"""
+
+from repro.resilience.errors import (Backpressure, CircuitOpen,
+                                     DeadlineExceeded, FutureTimeout,
+                                     ResilienceError, SolveFailure)
+from repro.resilience.escalate import (RungAttempt, escalation_ladder,
+                                       solve_with_escalation)
+from repro.resilience.faultinject import ServiceFaults, faulty_ops
+from repro.resilience.health import (HealthVerdict, SolveHealth,
+                                     default_orth_tol, judge, judge_plan,
+                                     solve_health)
+
+__all__ = [
+    "Backpressure",
+    "CircuitOpen",
+    "DeadlineExceeded",
+    "FutureTimeout",
+    "HealthVerdict",
+    "ResilienceError",
+    "RungAttempt",
+    "ServiceFaults",
+    "SolveFailure",
+    "SolveHealth",
+    "default_orth_tol",
+    "escalation_ladder",
+    "faulty_ops",
+    "judge",
+    "judge_plan",
+    "solve_health",
+    "solve_with_escalation",
+]

@@ -1,0 +1,165 @@
+"""In-graph solve health: the cheap runtime verdict every plan can emit.
+
+The failure modes this repo has actually measured — the Pallas f32
+indefinite-Gram NaN (ROADMAP 4a), a dynamic driver exiting its
+``while_loop`` at ``max_iters`` with the residual rule unmet, a runtime
+conditioning estimate beyond a kernel's precision envelope — all share
+one property: the factors come back *plausible-looking*.  NaNs aside,
+nothing downstream notices until accuracy silently degrades.
+
+:func:`solve_health` closes that gap inside the compiled graph: one
+extra Gram reduction (the ``UᵀU`` orthogonality residual — the paper's
+OrthL metric, eq. 14) plus three scalar reductions that are free next
+to the solve itself.  ``SvdPlan.svd_verified`` appends it to the solve
+executable, so verification adds no extra host round trip and no
+retrace.
+
+The host-side half — :func:`judge` / :func:`judge_plan` — turns the
+device scalars into a frozen :class:`HealthVerdict` with human-readable
+reasons; the escalation ladder (:mod:`repro.resilience.escalate`) and
+the serving triage loop key on ``verdict.ok`` and never inspect raw
+floats themselves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import norms as _norms
+from repro.core import registry as _registry
+
+
+class SolveHealth(NamedTuple):
+    """Device-side health scalars, computed inside the solve graph.
+
+    A NamedTuple of scalars so it vmaps: ``svd_batched_verified`` returns
+    one with a leading batch axis on every leaf, and the serving triage
+    loop indexes per-entry health out of it.
+    """
+
+    finite: jnp.ndarray     # bool: all of u, s, vh finite
+    orth: jnp.ndarray       # f32: ||UᵀU - I||_F / n  (paper OrthL)
+    converged: jnp.ndarray  # bool: the driver's stopping rule was met
+    kappa_est: jnp.ndarray  # f32: 1 / l_init — the conditioning the
+                            # solve actually ran under; NaN when unknown
+
+
+def solve_health(u, s, vh, info=None) -> SolveHealth:
+    """In-graph health of an SVD result (one extra Gram reduction).
+
+    The orthogonality residual is masked to the columns whose singular
+    values clear a rank-revealing cutoff (``max(m, n) * eps * s_max``):
+    null-space columns of a rank-deficient input — every zero-padded
+    serving slot is one — are an arbitrary completion the algorithm
+    never promised to orthonormalize, and the columns that carry the
+    answer are exactly the ones the check must hold to eps.
+    """
+    finite = (jnp.all(jnp.isfinite(u), axis=(-2, -1))
+              & jnp.all(jnp.isfinite(s), axis=-1)
+              & jnp.all(jnp.isfinite(vh), axis=(-2, -1)))
+    n = u.shape[-1]
+    g = jnp.einsum("...mk,...mn->...kn", u, u,
+                   preferred_element_type=jnp.promote_types(u.dtype,
+                                                            jnp.float32))
+    cutoff = (max(u.shape[-2], n) * jnp.finfo(u.dtype).eps
+              * jnp.max(s, axis=-1, keepdims=True))
+    valid = s > cutoff          # NaN s -> all-False; `finite` still fails
+    mask = valid[..., :, None] & valid[..., None, :]
+    n_valid = jnp.maximum(jnp.sum(valid, axis=-1), 1)
+    resid = jnp.where(mask, g - jnp.eye(n, dtype=g.dtype), 0.0)
+    orth = (_norms.frobenius(resid) / n_valid).astype(jnp.float32)
+    if info is not None:
+        converged = jnp.asarray(info.converged)
+        kappa_est = (1.0 / jnp.asarray(info.l_init, jnp.float32)) \
+            .astype(jnp.float32)
+    else:
+        converged = jnp.asarray(True)
+        kappa_est = jnp.asarray(float("nan"), jnp.float32)
+    return SolveHealth(finite=finite, orth=orth, converged=converged,
+                       kappa_est=kappa_est)
+
+
+def default_orth_tol(dtype) -> float:
+    """Orthogonality acceptance threshold for a compute dtype.
+
+    A healthy Zolo/QDWH solve lands at a small multiple of eps (paper
+    Tables 5/10: OrthL within ~10 eps); a broken one is off by many
+    orders.  1e4 * eps splits the two regimes with wide margin on both
+    sides (f64 ~2e-12, f32 ~1e-3)."""
+    return 1.0e4 * float(jnp.finfo(jnp.dtype(dtype)).eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthVerdict:
+    """Host-side judgment of one solve: ``ok`` plus why not."""
+
+    ok: bool
+    reasons: Tuple[str, ...]
+    finite: bool
+    orth: float
+    converged: bool
+    kappa_est: float
+    orth_tol: float
+    kappa_max: Optional[float] = None
+
+    def __str__(self):
+        if self.ok:
+            return f"healthy (orth={self.orth:.2e})"
+        return "unhealthy: " + "; ".join(self.reasons)
+
+
+def judge(health: SolveHealth, *, orth_tol: float,
+          kappa_max: Optional[float] = None) -> HealthVerdict:
+    """Turn device health scalars into a frozen verdict (host side).
+
+    ``kappa_max`` folds a backend's precision envelope into the runtime
+    verdict: a dynamic plan has no conditioning hint at plan time, so
+    the plan-time envelope check cannot fire — but the in-graph estimate
+    (``kappa_est = 1/l_init``) exists at execution time, and exceeding
+    the envelope there is a health failure even if the factors happen
+    to look finite.  A NaN ``kappa_est`` (driver with no bound) passes.
+    """
+    finite = bool(health.finite)
+    orth = float(health.orth)
+    converged = bool(health.converged)
+    kappa_est = float(health.kappa_est)
+    reasons = []
+    if not finite:
+        reasons.append("non-finite factors")
+    if not (orth <= orth_tol):  # NaN-propagating: NaN orth also fails
+        reasons.append(f"orthogonality {orth:.3e} > tol {orth_tol:.3e}")
+    if not converged:
+        reasons.append("stopping rule unmet at the iteration cap")
+    if kappa_max is not None and not math.isnan(kappa_est) \
+            and kappa_est > kappa_max:
+        reasons.append(f"runtime kappa estimate {kappa_est:.3g} beyond "
+                       f"the backend envelope {kappa_max:.3g}")
+    return HealthVerdict(ok=not reasons, reasons=tuple(reasons),
+                         finite=finite, orth=orth, converged=converged,
+                         kappa_est=kappa_est, orth_tol=orth_tol,
+                         kappa_max=kappa_max)
+
+
+def judge_plan(plan, health: SolveHealth, *,
+               orth_tol: Optional[float] = None) -> HealthVerdict:
+    """Judge one solve against its plan's own contract.
+
+    The orthogonality tolerance comes from the precision the solve
+    actually computed in (``compute_dtype`` when set, the plan dtype
+    otherwise), and the conditioning envelope from the backend's
+    registry spec (``kappa_max_f32``) whenever that compute precision
+    is below f64 — the registry flag drives the check, never the
+    backend's name.
+    """
+    compute = plan.config.compute_dtype
+    dtype = jnp.dtype(compute) if compute is not None \
+        else jnp.dtype(plan.dtype)
+    if orth_tol is None:
+        orth_tol = default_orth_tol(dtype)
+    spec = _registry.get_polar(plan.method)
+    kappa_max = spec.kappa_max_f32 if dtype.itemsize < 8 else None
+    return judge(health, orth_tol=orth_tol, kappa_max=kappa_max)

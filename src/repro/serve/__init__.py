@@ -2,10 +2,19 @@
 
 :mod:`repro.serve.svd_service` is the solver-facing subsystem: bucketed
 plan pool + continuous micro-batching over ``repro.solver`` plans
-(see that module's docstring for the request path).  The LM-shaped
-``ServeEngine`` seed scaffolding remains alongside it.
+(see that module's docstring for the request path and the PR 9 fault-
+tolerance layer — verified solves, retry ladders, deadlines, shedding,
+circuit breakers).  The typed serving errors (``Backpressure``,
+``CircuitOpen``, ``DeadlineExceeded``, ``FutureTimeout``,
+``SolveFailure``) live in :mod:`repro.resilience.errors` and are
+re-exported here for client convenience.  The LM-shaped ``ServeEngine``
+seed scaffolding remains alongside it.
 """
 
+from repro.resilience.errors import (Backpressure, CircuitOpen,
+                                     DeadlineExceeded, FutureTimeout,
+                                     SolveFailure)
+from repro.resilience.faultinject import ServiceFaults
 from repro.serve.bucketing import BucketKey, BucketPolicy
 from repro.serve.engine import ServeEngine, make_decode_fn, make_prefill_fn
 from repro.serve.scheduler import MicroBatchScheduler
@@ -18,12 +27,18 @@ from repro.serve.svd_service import (
 )
 
 __all__ = [
+    "Backpressure",
     "BucketKey",
     "BucketPolicy",
+    "CircuitOpen",
     "DEFAULT_MODES",
+    "DeadlineExceeded",
+    "FutureTimeout",
     "MicroBatchScheduler",
     "ServeEngine",
     "ServiceConfig",
+    "ServiceFaults",
+    "SolveFailure",
     "SvdFuture",
     "SvdService",
     "make_decode_fn",

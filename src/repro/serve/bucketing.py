@@ -32,9 +32,11 @@ compiled executables — the serving analog of a paging granularity knob.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import NamedTuple, Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -178,6 +180,28 @@ def unpad_topk(u, s, vh, m: int, n: int, k: int, transposed: bool):
     if transposed:
         return jnp.swapaxes(vh, -1, -2), s, jnp.swapaxes(u, -1, -2)
     return u, s, vh
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "transposed"))
+def unpad_svd_entry(u_b, s_b, vh_b, i, m, n, transposed: bool):
+    """One batch entry's :func:`unpad_svd`, fused into a single compiled
+    call.
+
+    The eager form costs ~10 op-by-op dispatches per request (the batch
+    gathers plus the partition/slice chain) — enough to make the serving
+    loop host-bound at small matrix sizes.  One jit per
+    (batch shape, request shape, orientation) collapses that to a single
+    dispatch; ``i`` is traced, so every slot of a bucket shares the
+    compilation.
+    """
+    return unpad_svd(u_b[i], s_b[i], vh_b[i], m, n, transposed)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "k", "transposed"))
+def unpad_topk_entry(u_b, s_b, vh_b, i, m, n, k: int, transposed: bool):
+    """One batch entry's :func:`unpad_topk` as a single compiled call
+    (same host-dispatch argument as :func:`unpad_svd_entry`)."""
+    return unpad_topk(u_b[i], s_b[i], vh_b[i], m, n, k, transposed)
 
 
 def pad_waste(shapes, m_pad: int, n_pad: int, slots: int) -> float:

@@ -78,6 +78,23 @@ class MicroBatchScheduler:
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
+    def drop(self, predicate) -> List[Any]:
+        """Remove and return every queued item with ``predicate(item)``
+        true, preserving FIFO order among the survivors.  The service's
+        deadline reaper: expired requests leave the queue *before* they
+        can occupy batch slots, and the caller fails their futures with
+        a typed error."""
+        dropped: List[Any] = []
+        for key, q in self._queues.items():
+            kept = collections.deque()
+            for entry in q:
+                if predicate(entry[1]):
+                    dropped.append(entry[1])
+                else:
+                    kept.append(entry)
+            self._queues[key] = kept
+        return dropped
+
     def pending_by_key(self) -> Dict[Hashable, int]:
         return {k: len(q) for k, q in self._queues.items() if q}
 
@@ -93,9 +110,12 @@ class MicroBatchScheduler:
         occupancy instead of one batch per poll.
         """
         now = self._clock() if now is None else now
-        heads = sorted((q[0][0], k) for k, q in self._queues.items() if q)
+        # queue-creation order breaks timestamp ties: keys need not be
+        # orderable (BucketKey and retry-lane keys share one scheduler)
+        heads = sorted((q[0][0], i, k) for i, (k, q)
+                       in enumerate(self._queues.items()) if q)
         out: List[Tuple[Hashable, List[Any]]] = []
-        for t_head, key in heads:
+        for t_head, _, key in heads:
             q = self._queues[key]
             while len(q) >= self.batch_size:
                 out.append((key, [q.popleft()[1]

@@ -38,6 +38,24 @@ The service is single-threaded and cooperative: ``submit`` enqueues,
 ``poll`` dispatches and sweeps, compute overlaps the Python loop via
 JAX's async dispatch.  ``result()`` on a not-yet-dispatched future
 flushes its bucket, so simple callers never deadlock.
+
+Fault tolerance (PR 9; see ``src/repro/resilience/README.md`` for the
+failure-mode map): with ``ServiceConfig.verify`` (the default) every
+dispatched batch runs ``svd_batched_verified`` — the in-graph
+:class:`repro.resilience.health.SolveHealth` rides back with the
+factors — and the completion sweep *triages* each ready batch
+per-entry: healthy entries resolve, unhealthy ones retry on the next
+rung of the bucket's escalation ladder (clean input, fresh plan through
+the LRU cache), and entries out of retries are quarantined with a typed
+:class:`~repro.resilience.errors.SolveFailure` carrying their verdict
+trail.  Around that core: per-request deadlines
+(:class:`DeadlineExceeded`), submit-time load shedding
+(:class:`Backpressure`), a per-bucket circuit breaker
+(:class:`CircuitOpen`), and dispatch-exception propagation into every
+affected future — so every future terminates in a result or a typed
+error, never a hang.  ``ServiceConfig.faults`` injects deterministic
+faults (:class:`repro.resilience.faultinject.ServiceFaults`) for chaos
+testing.
 """
 
 from __future__ import annotations
@@ -52,14 +70,20 @@ import jax.numpy as jnp
 import repro.solver as _solver
 import repro.spectral as _spectral
 from repro.analysis import jaxpr_audit as _audit
+from repro.resilience import escalate as _escalate
+from repro.resilience import health as _health
+from repro.resilience.errors import (Backpressure, CircuitOpen,
+                                     DeadlineExceeded, FutureTimeout,
+                                     SolveFailure)
+from repro.resilience.faultinject import ServiceFaults
 from repro.serve.bucketing import (
     BucketKey,
     BucketPolicy,
     canonicalize,
     pad_to_bucket,
     pad_waste,
-    unpad_svd,
-    unpad_topk,
+    unpad_svd_entry,
+    unpad_topk_entry,
 )
 from repro.serve.scheduler import MicroBatchScheduler
 
@@ -122,6 +146,31 @@ class ServiceConfig:
                  host callback fails *before* it serves traffic.
                  ``stats()["plan_audits"]`` reports the counters either
                  way.
+    verify       run every full-SVD batch through
+                 ``svd_batched_verified`` and triage entries by their
+                 in-graph health verdict (retry up the escalation
+                 ladder, quarantine after ``max_retries``).  Off, the
+                 service trusts every solve — the pre-PR-9 behavior.
+                 The topk lane is never verified (its sketch path has
+                 its own residual check; see ``topk_adaptive``).
+    deadline     default per-request deadline in seconds from submit
+                 (None: no deadline).  A request still queued — or
+                 awaiting a retry — past its deadline fails with
+                 ``DeadlineExceeded``; ``submit(deadline=)`` overrides
+                 per request.
+    max_retries  health-failure retries per request before quarantine
+                 (each retry climbs one escalation-ladder rung).
+    max_queue_depth  submit-time load shed: a submit that would push
+                 the queued-request count past this raises
+                 ``Backpressure`` (None: never shed).
+    breaker_threshold / breaker_cooldown  per-bucket circuit breaker:
+                 after ``breaker_threshold`` consecutive dispatch/plan
+                 failures in a bucket, submits to it raise
+                 ``CircuitOpen`` for ``breaker_cooldown`` seconds, then
+                 the breaker closes and counts afresh.
+    faults       deterministic fault-injection plan
+                 (:class:`repro.resilience.faultinject.ServiceFaults`)
+                 for chaos tests; None in production.
     """
 
     batch_size: int = 4
@@ -134,6 +183,13 @@ class ServiceConfig:
     data_axis: Optional[Tuple[Any, ...]] = None
     max_wait_overrides: Tuple[Tuple[str, float], ...] = ()
     audit_plans: bool = False
+    verify: bool = True
+    deadline: Optional[float] = None
+    max_retries: int = 2
+    max_queue_depth: Optional[int] = None
+    breaker_threshold: int = 3
+    breaker_cooldown: float = 1.0
+    faults: Optional[ServiceFaults] = None
 
     def mode_kappa(self, mode: str) -> float:
         # the partial-spectrum lane rides the "standard" accuracy hint:
@@ -155,22 +211,47 @@ class _Request:
     padded: Any                     # canonical, bucket-shaped matrix
     future: "SvdFuture"
     t_submit: float
+    deadline: Optional[float] = None  # absolute service-clock time
+    rung: int = 0                     # escalation-ladder rung to run at
+    retries: int = 0                  # health-failure retries consumed
+    trail: List[Any] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class _RetryLane:
+    """Scheduler key of a bucket's rung-k retry queue (k >= 1).
+
+    Retries batch among themselves — their plan differs from rung 0's,
+    so sharing the primary queue would split compiled batches — while
+    the primary ``BucketKey`` lanes and every existing scheduler policy
+    stay byte-for-byte unchanged."""
+
+    bucket: BucketKey
+    rung: int
 
 
 class SvdFuture:
     """Per-request handle: resolved by the service, blocked only by you.
 
     States: *queued* (in a bucket FIFO) -> *dispatched* (the batch ran;
-    results are async JAX arrays) -> *done* (arrays observed ready by a
-    service sweep).  ``result()`` is the response edge — the only place
-    ``jax.block_until_ready`` runs; calling it early force-flushes the
-    owning bucket so it can never deadlock on an un-filled batch.
+    results are async JAX arrays) -> *resolved* (the sweep verified the
+    entry healthy — or, with verification off, at dispatch) or *failed*
+    (a typed :class:`repro.resilience.errors.ResilienceError`, or the
+    captured dispatch exception).  ``result()`` is the response edge —
+    the only place ``jax.block_until_ready`` runs; calling it early
+    force-flushes the owning bucket so it can never deadlock on an
+    un-filled batch, and a retried request re-dispatches from inside
+    the same loop.  A failed future raises its exception from
+    ``result()`` — every future terminates, none hang.
     """
 
     def __init__(self, service: "SvdService", seq: int):
         self._service = service
         self.seq = seq
         self._out = None
+        self._exc: Optional[BaseException] = None
+        self._resolved = False
+        self._flight: Optional["_Inflight"] = None
         self.t_submit: Optional[float] = None
         self.t_done: Optional[float] = None
 
@@ -179,8 +260,12 @@ class SvdFuture:
         return self._out is not None
 
     def done(self) -> bool:
-        """Non-blocking: has a sweep observed the results ready?"""
-        return self.t_done is not None
+        """Non-blocking: resolved or failed?"""
+        return self._resolved or self._exc is not None
+
+    def exception(self) -> Optional[BaseException]:
+        """The failure, if this future failed (None while live/ok)."""
+        return self._exc
 
     @property
     def latency(self) -> Optional[float]:
@@ -189,32 +274,86 @@ class SvdFuture:
             return None
         return self.t_done - self.t_submit
 
-    def result(self):
-        """(u, s, vh) of the request — blocks until ready."""
-        while self._out is None:
+    def result(self, timeout: Optional[float] = None):
+        """(u, s, vh) of the request — blocks until resolved.
+
+        Raises the request's typed error if it failed
+        (``SolveFailure`` / ``DeadlineExceeded`` / a captured dispatch
+        exception), or :class:`FutureTimeout` after ``timeout`` seconds
+        — the request itself stays live and ``result()`` can be called
+        again.
+        """
+        give_up = (None if timeout is None
+                   else self._service._now() + float(timeout))
+        while not self.done():
+            if self._flight is not None:
+                # dispatched: wait for the device, then let the sweep
+                # triage (resolve / retry / quarantine) this flight
+                jax.block_until_ready(self._flight.raw)
             self._service.poll(force=True)
+            if give_up is not None and not self.done() \
+                    and self._service._now() >= give_up:
+                raise FutureTimeout(
+                    f"request {self.seq} not resolved within "
+                    f"{timeout}s (still "
+                    f"{'in flight' if self._flight else 'queued'})")
+        if self._exc is not None:
+            raise self._exc
         out = jax.block_until_ready(self._out)
         if self.t_done is None:
-            self.t_done = self._service._clock()
+            self.t_done = self._service._now()
         return out
 
     # service-side transitions ------------------------------------------
-    def _dispatch(self, out) -> None:
+    def _dispatch(self, out, flight: Optional["_Inflight"] = None) -> None:
         self._out = out
+        self._flight = flight
 
-    def _complete(self, now: float) -> None:
+    def _resolve(self, now: float) -> None:
+        self._resolved = True
+        self._flight = None
         if self.t_done is None:
             self.t_done = now
+
+    def _retry(self) -> None:
+        # back to *queued*: the unhealthy result must not be returned
+        self._out = None
+        self._flight = None
+
+    def _fail(self, exc: BaseException, now: float) -> None:
+        self._exc = exc
+        self._out = None
+        self._flight = None
+        if self.t_done is None:
+            self.t_done = now
+
+    def _complete(self, now: float) -> None:
+        self._resolve(now)
 
 
 @dataclasses.dataclass
 class _Inflight:
     key: BucketKey
     raw: Tuple[Any, ...]            # batch-level arrays to probe
-    futures: List[SvdFuture]
+    reqs: List[_Request]
+    health: Any = None              # batched SolveHealth when verifying
+    plan: Any = None                # the plan that ran (for judging)
+    reason: str = "as planned"      # ladder rung that actually planned
+
+    @property
+    def futures(self) -> List[SvdFuture]:
+        return [r.future for r in self.reqs]
 
     def is_ready(self) -> bool:
         return all(a.is_ready() for a in self.raw)
+
+
+@dataclasses.dataclass
+class _Breaker:
+    """Per-bucket failure counter with a cooldown latch."""
+
+    failures: int = 0
+    open_until: Optional[float] = None
 
 
 class SvdService:
@@ -225,9 +364,11 @@ class SvdService:
         self.config = config
         self.policy = BucketPolicy(base=config.base, growth=config.growth)
         self._clock = clock
+        self._skew = (config.faults.clock_skew
+                      if config.faults is not None else 0.0)
         self._sched = MicroBatchScheduler(config.batch_size,
                                           max_wait=config.max_wait,
-                                          clock=clock)
+                                          clock=self._now)
         self._inflight: List[_Inflight] = []
         self._seq = 0
         self._sharding = None
@@ -244,7 +385,13 @@ class SvdService:
         # re-snapshotted by warmup so the steady-state metric is clean)
         self._stats = {"solves": 0, "batches": 0, "slots": 0,
                        "slots_filled": 0, "useful_elems": 0,
-                       "padded_elems": 0}
+                       "padded_elems": 0, "health_failures": 0,
+                       "retries": 0, "quarantined": 0, "shed": 0,
+                       "deadline_expired": 0, "dispatch_errors": 0,
+                       "circuit_opens": 0, "circuit_rejects": 0}
+        self._breakers: Dict[BucketKey, _Breaker] = {}
+        self._ladders: Dict[BucketKey, List[Tuple[Any, str]]] = {}
+        self._dispatch_count = 0
         self._cache_base = _solver.cache_stats()
         self._trace_base = _solver.trace_count()
         self._topk_trace_base = _spectral.trace_count()
@@ -254,6 +401,11 @@ class SvdService:
         self._wait_overrides = {str(t): float(w)
                                 for t, w in config.max_wait_overrides}
         self._warm: List[BucketKey] = []
+
+    def _now(self) -> float:
+        """Service time: the injected clock plus any injected skew —
+        every deadline, age, and timestamp reads through here."""
+        return self._clock() + self._skew
 
     # --- plan pool -----------------------------------------------------
 
@@ -267,15 +419,45 @@ class SvdService:
                                  l0_policy="estimate_at_plan",
                                  compute_dtype=compute)
 
-    def _bucket_plan(self, key: BucketKey):
+    def _bucket_plan(self, key: BucketKey, rung: int = 0):
+        """Plan (or LRU-hit) the bucket's executable for an escalation
+        rung; returns ``(plan, reason)`` where ``reason`` names the
+        ladder rung that actually planned — rungs are skipped when
+        their config cannot plan for this bucket, so the requested
+        index alone would mislabel failure trails."""
         k = topk_mode_k(key.mode)
-        if k is None:
-            return _solver.plan(self._bucket_config(key),
-                                (key.m_pad, key.n_pad), key.dtype)
-        inner = self._bucket_config(key)
-        cfg = _spectral.TopKConfig(k=k, kappa=inner.kappa, svd=inner)
-        return _spectral.plan_topk(cfg, (key.m_pad, key.n_pad),
-                                   key.dtype)
+        if k is not None:
+            inner = self._bucket_config(key)
+            cfg = _spectral.TopKConfig(k=k, kappa=inner.kappa, svd=inner)
+            return (_spectral.plan_topk(cfg, (key.m_pad, key.n_pad),
+                                        key.dtype), "as planned")
+        if rung == 0:
+            return (_solver.plan(self._bucket_config(key),
+                                 (key.m_pad, key.n_pad), key.dtype),
+                    "as planned")
+        # retry rung: the bucket's escalation ladder, planned through
+        # the same LRU cache.  A rung whose config cannot plan here is
+        # skipped upward; past the last rung the ladder's final (most
+        # conservative) rung serves every further retry.
+        ladder = self._ladder(key)
+        err = None
+        for cfg, reason in ladder[min(rung, len(ladder) - 1):]:
+            try:
+                return (_solver.plan(cfg, (key.m_pad, key.n_pad),
+                                     key.dtype), reason)
+            except (ValueError, TypeError) as e:
+                err = e
+        raise ValueError(f"no escalation rung of bucket {key} plans: "
+                         f"{err}")
+
+    def _ladder(self, key: BucketKey):
+        ladder = self._ladders.get(key)
+        if ladder is None:
+            plan0 = _solver.plan(self._bucket_config(key),
+                                 (key.m_pad, key.n_pad), key.dtype)
+            ladder = _escalate.escalation_ladder(plan0)
+            self._ladders[key] = ladder
+        return ladder
 
     def warmup(self, shapes: Sequence[Tuple[int, int]],
                modes: Sequence[str] = ("standard",),
@@ -298,7 +480,7 @@ class SvdService:
                     if key in keys:
                         continue
                     keys.append(key)
-                    plan = self._bucket_plan(key)
+                    plan, _ = self._bucket_plan(key)
                     if self.config.audit_plans:
                         # fail loud at warmup, not under traffic: the
                         # graph invariants (psum structure, dtype
@@ -312,7 +494,13 @@ class SvdService:
                         zeros = jax.device_put(zeros, self._sharding)
                     if topk_mode_k(key.mode) is None:
                         _solver.pin(plan)
-                        jax.block_until_ready(plan.svd_batched(zeros))
+                        # compile the exact executable dispatch will run
+                        # (verified solves carry the health reduction)
+                        if self.config.verify:
+                            jax.block_until_ready(
+                                plan.svd_batched_verified(zeros))
+                        else:
+                            jax.block_until_ready(plan.svd_batched(zeros))
                     else:
                         # a TopKPlan's executables live on the plan; pin
                         # its inner SvdPlans against LRU pressure
@@ -327,12 +515,22 @@ class SvdService:
 
     # --- request path --------------------------------------------------
 
-    def submit(self, a, mode: str = "standard") -> SvdFuture:
+    def submit(self, a, mode: str = "standard",
+               deadline: Optional[float] = None) -> SvdFuture:
         """Enqueue one (m, n) SVD request; returns its future.
 
         Accepts any 2-D matrix (tall, wide, square) of any dtype the
         solver takes.  The call is non-blocking: padding is a cheap
         async device op and dispatch happens at the next ``poll``.
+
+        ``deadline`` (seconds from now; default ``config.deadline``)
+        bounds how long the request may wait — in the queue or between
+        retries — before it fails with ``DeadlineExceeded``.  Raises
+        :class:`Backpressure` when the queue is at
+        ``config.max_queue_depth`` and :class:`CircuitOpen` while the
+        request's bucket breaker is cooling down: both *before*
+        enqueueing, so a shed request costs the client one exception
+        and the service nothing.
         """
         a = jnp.asarray(a)
         if a.ndim != 2:
@@ -344,76 +542,158 @@ class SvdService:
             raise ValueError(
                 f"mode {mode!r} asks for {k} triplets but the request "
                 f"is {tuple(a.shape)} (rank at most {min(a.shape)})")
-        now = self._clock()
+        now = self._now()
+        depth = self.config.max_queue_depth
+        if depth is not None and self._sched.pending() >= depth:
+            self._stats["shed"] += 1
+            raise Backpressure(
+                f"queue depth {self._sched.pending()} at its limit "
+                f"{depth}; back off and resubmit")
         key = self.policy.key_for(a.shape, a.dtype, mode)
+        self._check_breaker(key, now)
         wait = self._wait_overrides.get(str(mode))
         if wait is not None:
             self._sched.set_max_wait(key, wait)
         a_c, transposed = canonicalize(a)
         fut = SvdFuture(self, self._seq)
         fut.t_submit = now
+        if deadline is None:
+            deadline = self.config.deadline
         req = _Request(seq=self._seq, shape=tuple(a.shape),
                        transposed=transposed,
                        padded=pad_to_bucket(a_c, key.m_pad, key.n_pad),
-                       future=fut, t_submit=now)
+                       future=fut, t_submit=now,
+                       deadline=(None if deadline is None
+                                 else now + float(deadline)))
         self._seq += 1
         self._sched.enqueue(key, req, now=now)
         return fut
 
+    # --- circuit breaker ----------------------------------------------
+
+    def _check_breaker(self, key: BucketKey, now: float) -> None:
+        br = self._breakers.get(key)
+        if br is None or br.open_until is None:
+            return
+        if now < br.open_until:
+            self._stats["circuit_rejects"] += 1
+            raise CircuitOpen(
+                f"bucket {key} breaker open for another "
+                f"{br.open_until - now:.3g}s after {br.failures} "
+                f"consecutive failures")
+        # cooldown over: close and count afresh
+        self._breakers[key] = _Breaker()
+
+    def _breaker_failure(self, key: BucketKey, now: float) -> None:
+        br = self._breakers.setdefault(key, _Breaker())
+        br.failures += 1
+        if br.failures >= self.config.breaker_threshold \
+                and br.open_until is None:
+            br.open_until = now + self.config.breaker_cooldown
+            self._stats["circuit_opens"] += 1
+
+    def _breaker_success(self, key: BucketKey) -> None:
+        br = self._breakers.get(key)
+        if br is not None and br.open_until is None:
+            br.failures = 0
+
     def poll(self, force: bool = False) -> int:
-        """Dispatch every ready micro-batch and sweep completions.
+        """Reap deadlines, dispatch ready micro-batches, sweep and
+        triage completions.
 
         Non-blocking; returns the number of batches dispatched.
         ``force=True`` flushes partial batches regardless of age (the
         shutdown / explicit-flush path).
         """
+        now = self._now()
+        expired = self._sched.drop(
+            lambda r: r.deadline is not None and now >= r.deadline)
+        for r in expired:
+            self._stats["deadline_expired"] += 1
+            r.future._fail(DeadlineExceeded(
+                f"request {r.seq} expired after "
+                f"{now - r.t_submit:.3g}s in queue"), now)
         dispatched = 0
-        for key, reqs in self._sched.ready(now=self._clock(), force=force):
+        for key, reqs in self._sched.ready(now=now, force=force):
             self._dispatch(key, reqs)
             dispatched += 1
         self._sweep()
         return dispatched
 
     def flush(self) -> None:
-        """Dispatch everything pending and block until all results are
-        ready (the only batch-level block in the service)."""
-        while self._sched.pending():
+        """Dispatch everything pending — retries included — and block
+        until every future is terminal (the only batch-level block in
+        the service)."""
+        while self._sched.pending() or self._inflight:
             self.poll(force=True)
-        for flight in self._inflight:
-            jax.block_until_ready(flight.raw)
-        self._sweep()
+            for flight in self._inflight:
+                jax.block_until_ready(flight.raw)
+            self._sweep()
 
-    def _dispatch(self, key: BucketKey, reqs: List[_Request]) -> None:
-        plan = self._bucket_plan(key)  # LRU hit in steady state
-        slots = self.config.batch_size
-        dtype = jnp.dtype(key.dtype)
-        mats = [r.padded for r in reqs]
-        if len(mats) < slots:
-            # fixed batch shape = one executable per bucket; a zero
-            # matrix is solver-exact (every factor is zero) and cheap
-            mats += [jnp.zeros((key.m_pad, key.n_pad), dtype)] * \
-                (slots - len(mats))
-        batch = jnp.stack(mats)
-        if self._sharding is not None:
-            batch = jax.device_put(batch, self._sharding)
-        k = topk_mode_k(key.mode)
-        if k is None:
-            u_b, s_b, vh_b = plan.svd_batched(batch)
+    def _dispatch(self, lane, reqs: List[_Request]) -> None:
+        if isinstance(lane, _RetryLane):
+            key, rung = lane.bucket, lane.rung
         else:
-            u_b, s_b, vh_b = plan.topk_batched(batch)
-        futures = []
+            key, rung = lane, 0
+        now = self._now()
+        idx = self._dispatch_count
+        self._dispatch_count += 1
+        faults = self.config.faults
+        k = topk_mode_k(key.mode)
+        try:
+            if faults is not None and idx in faults.dispatch_error_batches:
+                raise RuntimeError(faults.dispatch_error)
+            plan, reason = self._bucket_plan(key, rung)  # LRU hit in steady state
+            slots = self.config.batch_size
+            dtype = jnp.dtype(key.dtype)
+            mats = [r.padded for r in reqs]
+            if faults is not None and faults.nan_request_seqs:
+                for i, r in enumerate(reqs):
+                    if r.seq in faults.nan_request_seqs \
+                            and r.rung < faults.nan_below_rung:
+                        # corrupt the dispatched copy only: the request
+                        # keeps its clean input for retries
+                        mats[i] = jnp.full_like(r.padded, float("nan"))
+            if len(mats) < slots:
+                # fixed batch shape = one executable per bucket; a zero
+                # matrix is solver-exact (every factor is zero) and cheap
+                mats += [jnp.zeros((key.m_pad, key.n_pad), dtype)] * \
+                    (slots - len(mats))
+            batch = jnp.stack(mats)
+            if self._sharding is not None:
+                batch = jax.device_put(batch, self._sharding)
+            health = None
+            if k is not None:
+                u_b, s_b, vh_b = plan.topk_batched(batch)
+                raw = (u_b, s_b, vh_b)
+            elif self.config.verify:
+                u_b, s_b, vh_b, health = plan.svd_batched_verified(batch)
+                # health leaves ride in raw so is_ready covers them
+                raw = (u_b, s_b, vh_b) + tuple(health)
+            else:
+                u_b, s_b, vh_b = plan.svd_batched(batch)
+                raw = (u_b, s_b, vh_b)
+        except Exception as e:  # noqa: BLE001 — every dispatch failure,
+            # whatever its type, must reach the batch's futures: an
+            # exception escaping here would leave them pending forever
+            self._stats["dispatch_errors"] += 1
+            self._breaker_failure(key, now)
+            for r in reqs:
+                r.future._fail(e, now)
+            return
+        flight = _Inflight(key, raw, list(reqs), health=health, plan=plan,
+                           reason=reason)
         for i, r in enumerate(reqs):
             m, n = r.shape
             mc, nc = (n, m) if r.transposed else (m, n)
             if k is None:
-                out = unpad_svd(u_b[i], s_b[i], vh_b[i], mc, nc,
-                                r.transposed)
+                out = unpad_svd_entry(u_b, s_b, vh_b, i, mc, nc,
+                                      r.transposed)
             else:
-                out = unpad_topk(u_b[i], s_b[i], vh_b[i], mc, nc, k,
-                                 r.transposed)
-            r.future._dispatch(out)
-            futures.append(r.future)
-        self._inflight.append(_Inflight(key, (u_b, s_b, vh_b), futures))
+                out = unpad_topk_entry(u_b, s_b, vh_b, i, mc, nc, k,
+                                       r.transposed)
+            r.future._dispatch(out, flight)
+        self._inflight.append(flight)
         self._stats["solves"] += len(reqs)
         self._stats["batches"] += 1
         self._stats["slots"] += slots
@@ -423,14 +703,54 @@ class SvdService:
         self._stats["padded_elems"] += slots * key.m_pad * key.n_pad
 
     def _sweep(self) -> None:
-        """Timestamp completions without blocking: pop in-flight batches
-        whose arrays report ready (dispatch order = completion order on
-        a single stream)."""
-        now = self._clock()
+        """Pop ready in-flight batches (dispatch order = completion
+        order on a single stream) and triage each entry by its health
+        verdict: resolve, retry on the next escalation rung, or
+        quarantine.  Unverified flights (topk lane, ``verify=False``)
+        resolve wholesale, as before PR 9."""
+        now = self._now()
         while self._inflight and self._inflight[0].is_ready():
             flight = self._inflight.pop(0)
-            for fut in flight.futures:
-                fut._complete(now)
+            if flight.health is None:
+                for r in flight.reqs:
+                    r.future._resolve(now)
+                self._breaker_success(flight.key)
+                continue
+            h = jax.device_get(flight.health)
+            all_ok = True
+            for i, r in enumerate(flight.reqs):
+                entry = _health.SolveHealth(
+                    finite=h.finite[i], orth=h.orth[i],
+                    converged=h.converged[i], kappa_est=h.kappa_est[i])
+                verdict = _health.judge_plan(flight.plan, entry)
+                if verdict.ok:
+                    r.future._resolve(now)
+                    continue
+                all_ok = False
+                self._stats["health_failures"] += 1
+                r.trail.append(_escalate.RungAttempt(
+                    rung=r.rung, reason=flight.reason,
+                    config=flight.plan.config, outcome="failed",
+                    verdict=verdict))
+                if r.deadline is not None and now >= r.deadline:
+                    self._stats["deadline_expired"] += 1
+                    r.future._fail(DeadlineExceeded(
+                        f"request {r.seq} expired after failing its "
+                        f"health check (no time left to retry)"), now)
+                elif r.retries >= self.config.max_retries:
+                    self._stats["quarantined"] += 1
+                    r.future._fail(SolveFailure(tuple(r.trail)), now)
+                else:
+                    r.retries += 1
+                    r.rung += 1
+                    self._stats["retries"] += 1
+                    r.future._retry()
+                    self._sched.enqueue(_RetryLane(flight.key, r.rung),
+                                        r, now=now)
+            if all_ok:
+                self._breaker_success(flight.key)
+            else:
+                self._breaker_failure(flight.key, now)
 
     # --- observability -------------------------------------------------
 

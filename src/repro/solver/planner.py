@@ -555,7 +555,11 @@ class SvdPlan:
         return q, h, info
 
     def _svd_impl(self, a, extra=None):
-        q, h, _, transposed, alpha, out_dtype = \
+        u, s, vh, _ = self._svd_impl_info(a, extra)
+        return u, s, vh
+
+    def _svd_impl_info(self, a, extra=None):
+        q, h, info, transposed, alpha, out_dtype = \
             self._polar_canonical(a, True, extra)
         w, v = self._eig_spec.fn(h, **self._eig_kwargs)
         u = jnp.einsum("...mk,...kn->...mn", q, v)
@@ -576,8 +580,15 @@ class SvdPlan:
         vh = vh.astype(out_dtype)
         if transposed:
             # a = (u s vh)^T = v s u^T
-            return vh.swapaxes(-1, -2), s, jnp.swapaxes(u, -1, -2)
-        return u, s, vh
+            return vh.swapaxes(-1, -2), s, jnp.swapaxes(u, -1, -2), info
+        return u, s, vh, info
+
+    def _svd_verified_impl(self, a, extra=None):
+        # lazy: repro.resilience layers on repro.solver, not the reverse
+        from repro.resilience import health as _rhealth
+
+        u, s, vh, info = self._svd_impl_info(a, extra)
+        return u, s, vh, _rhealth.solve_health(u, s, vh, info)
 
     # --- compiled execution -------------------------------------------
 
@@ -639,11 +650,37 @@ class SvdPlan:
             ("polar", want_h),
             lambda x: self._polar_impl(x, want_h=want_h))(a)
 
+    def svd_verified(self, a):
+        """``svd`` plus its in-graph health — compiled.
+
+        Returns ``(u, s, vh, health)`` with ``health`` a
+        :class:`repro.resilience.health.SolveHealth` of device scalars
+        (all-finite flag, ``||UᵀU - I||_F / n``, the driver's converged
+        flag, and the runtime conditioning estimate), computed inside
+        the same executable as the solve — one extra Gram reduction,
+        no extra trace.  Judge it with
+        :func:`repro.resilience.health.judge_plan`.
+        """
+        self._check(a)
+        return self._executable(("svd_verified",),
+                                self._svd_verified_impl)(a)
+
     def svd_batched(self, a):
         """``svd`` vmapped over leading axes of (..., m, n) — compiled."""
         self._check(a, batched=True)
         return self._executable(("svd_batched",),
                                 self._batched(self._svd_impl))(a)
+
+    def svd_batched_verified(self, a):
+        """``svd_verified`` vmapped over leading axes — compiled.
+
+        Health leaves carry the leading batch axes, so a serving layer
+        triages entries individually (``jax.tree.map(lambda t: t[i],
+        health)``) instead of failing a whole batch for one bad entry.
+        """
+        self._check(a, batched=True)
+        return self._executable(("svd_batched_verified",),
+                                self._batched(self._svd_verified_impl))(a)
 
     def polar_batched(self, a, want_h: bool = True):
         """``polar`` vmapped over leading axes — compiled (the ZoloMuon

@@ -294,6 +294,13 @@ class TopKPlan:
         recording what happened.  Dense solves skip the check — they
         are already exact.
 
+        The dense fallback runs through the resilience escalation
+        ladder (:func:`repro.resilience.solve_with_escalation`): the
+        first rung is the plan's own dense solve with its in-graph
+        health verdict, and an unhealthy dense solve climbs the same
+        registry-derived rungs as any serving request.  The rung trail
+        is recorded under ``info["trail"]``.
+
         ``tol`` gates the *residual* (a backward error): by the
         quadratic convergence of Ritz values, residual <= sqrt(tol_val)
         certifies value error <= tol_val, so the default gate is
@@ -306,12 +313,24 @@ class TopKPlan:
             return u, s, vh, info
         res = float(self.residual(a, u, s, vh))
         info.update(escalated=False, residual=res)
-        if res > tol:
-            dense = plan_topk(
-                self.config.replace(strategy="dense"), self.shape,
-                self.dtype)
-            u, s, vh, _ = dense.topk_with_info(a)
-            info["escalated"] = True
+        if not (res <= tol):  # NaN-propagating: a NaN residual (the
+            # sketch panel broke down) must escalate, not sail through
+            # a False `res > tol` comparison
+            # lazy: repro.resilience layers on repro.spectral, not the
+            # reverse
+            from repro.resilience import escalate as _escalate
+
+            x = jnp.swapaxes(a, -1, -2) if self._transposed else a
+            u_f, s_f, vh_f, trail = _escalate.solve_with_escalation(
+                x, self._inner["dense"].config)
+            uk, sk, vhk = (u_f[..., :, :self.k], s_f[..., :self.k],
+                           vh_f[..., :self.k, :])
+            if self._transposed:
+                u, s, vh = (jnp.swapaxes(vhk, -1, -2), sk,
+                            jnp.swapaxes(uk, -1, -2))
+            else:
+                u, s, vh = uk, sk, vhk
+            info.update(escalated=True, trail=trail)
         return u, s, vh, info
 
 

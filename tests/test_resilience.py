@@ -1,0 +1,453 @@
+"""Resilience layer: in-graph health verdicts, the escalation ladder,
+fault injection, and the serving fault-tolerance paths (chaos test).
+
+Maps to src/repro/resilience/README.md: every failure mode there has a
+test here that injects it and asserts the documented recovery.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as C
+import repro.solver as S
+from repro.core.registry import get_polar, register_polar
+from repro.core.svd import PALLAS_F32_KAPPA_MAX
+from repro.core.zolo import DEFAULT_OPS
+from repro.resilience import (
+    Backpressure,
+    CircuitOpen,
+    DeadlineExceeded,
+    FutureTimeout,
+    ServiceFaults,
+    SolveFailure,
+    default_orth_tol,
+    escalation_ladder,
+    faulty_ops,
+    judge,
+    judge_plan,
+    solve_with_escalation,
+)
+from repro.resilience.health import SolveHealth
+from repro.serve import ServiceConfig, SvdService
+from repro.serve.scheduler import MicroBatchScheduler
+
+from conftest import make_matrix
+
+
+# --- satellite 2: the converged flag -----------------------------------------
+
+
+def test_dynamic_driver_reports_nonconvergence():
+    a = make_matrix(64, 48, kappa=1e10, seed=3)
+    _, _, info = C.zolo_pd(a, want_h=False, max_iters=1)
+    assert not bool(info.converged)
+    _, _, info = C.zolo_pd(a, want_h=False)
+    assert bool(info.converged)
+    # kappa_est = 1/l_init tracks the true conditioning
+    assert 1e8 < 1.0 / float(info.l_init) < 1e13
+
+
+def test_polarinfo_defaults_backcompat():
+    # three-field construction (out-of-tree backends, old tests) still
+    # works; the defaults read as converged / unknown conditioning
+    info = C.PolarInfo(jnp.int32(1), jnp.asarray(0.0), jnp.asarray(1.0))
+    assert bool(info.converged)
+    assert np.isnan(float(info.l_init))
+
+
+# --- tentpole (a): in-graph health verdicts ----------------------------------
+
+
+def test_svd_verified_healthy():
+    a = make_matrix(64, 48, kappa=1e4, seed=0)
+    p = S.plan(S.SvdConfig(kappa=1e4, l0_policy="estimate_at_plan"), a.shape, a.dtype)
+    u, s, vh, health = p.svd_verified(a)
+    verdict = judge_plan(p, health)
+    assert verdict.ok, str(verdict)
+    assert bool(health.finite)
+    assert float(health.orth) < default_orth_tol(a.dtype)
+    # the factors are the same ones svd() returns
+    u0, s0, vh0 = p.svd(a)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s0))
+
+
+def test_svd_batched_verified_leaves_carry_batch_axis():
+    a = jnp.stack([make_matrix(48, 32, kappa=1e3, seed=i)
+                   for i in range(3)])
+    p = S.plan(S.SvdConfig(kappa=1e3, l0_policy="estimate_at_plan"), (48, 32), a.dtype)
+    u, s, vh, health = p.svd_batched_verified(a)
+    assert u.shape == (3, 48, 32)
+    for leaf in health:
+        assert leaf.shape[:1] == (3,)
+    for i in range(3):
+        entry = SolveHealth(health.finite[i], health.orth[i],
+                            health.converged[i], health.kappa_est[i])
+        assert judge_plan(p, entry).ok
+
+
+def test_health_masks_null_space_columns():
+    # a zero-padded (rank-deficient) matrix is every serving slot's
+    # reality: null-space columns of U are an arbitrary completion and
+    # must not fail the orthogonality check
+    a = make_matrix(48, 24, kappa=1e3, seed=1)
+    padded = jnp.zeros((64, 48), a.dtype).at[:48, :24].set(a)
+    p = S.plan(S.SvdConfig(kappa=1e3, l0_policy="estimate_at_plan"), (64, 48), a.dtype)
+    _, s, _, health = p.svd_verified(padded)
+    verdict = judge_plan(p, health)
+    assert verdict.ok, str(verdict)
+
+
+def test_judge_reasons():
+    bad = SolveHealth(finite=jnp.asarray(False),
+                      orth=jnp.asarray(1.0, jnp.float32),
+                      converged=jnp.asarray(False),
+                      kappa_est=jnp.asarray(1e5, jnp.float32))
+    v = judge(bad, orth_tol=1e-10, kappa_max=2e4)
+    assert not v.ok and len(v.reasons) == 4
+    # NaN orthogonality (NaN factors) must fail, not sail through
+    nan_orth = bad._replace(finite=jnp.asarray(True),
+                            orth=jnp.asarray(float("nan"), jnp.float32),
+                            converged=jnp.asarray(True),
+                            kappa_est=jnp.asarray(float("nan"),
+                                                  jnp.float32))
+    assert not judge(nan_orth, orth_tol=1e-10).ok
+
+
+# --- satellite 3: the runtime kappa envelope ---------------------------------
+
+
+def test_runtime_envelope_folded_into_verdict():
+    class _Stub:
+        config = S.SvdConfig(method="zolo", compute_dtype="float32")
+        dtype = jnp.float32
+        method = "zolo_pallas_dynamic"
+
+    spec = get_polar("zolo_pallas_dynamic")
+    assert spec.kappa_max_f32 is not None
+    beyond = SolveHealth(finite=jnp.asarray(True),
+                         orth=jnp.asarray(1e-6, jnp.float32),
+                         converged=jnp.asarray(True),
+                         kappa_est=jnp.asarray(spec.kappa_max_f32 * 10,
+                                               jnp.float32))
+    v = judge_plan(_Stub(), beyond)
+    assert not v.ok and any("envelope" in r for r in v.reasons)
+    inside = beyond._replace(
+        kappa_est=jnp.asarray(spec.kappa_max_f32 / 10, jnp.float32))
+    assert judge_plan(_Stub(), inside).ok
+    # under f64 compute the f32 envelope does not apply
+
+    class _StubF64(_Stub):
+        config = S.SvdConfig(method="zolo", compute_dtype="float64")
+        dtype = jnp.float64
+
+    v64 = judge_plan(_StubF64(), beyond)
+    assert not any("envelope" in r for r in v64.reasons)
+
+
+# --- tentpole (b): the escalation ladder -------------------------------------
+
+
+def test_ladder_derived_from_capability_flags():
+    p = S.plan(S.SvdConfig(method="zolo_static", kappa=1e4,
+               l0_policy="estimate_at_plan"),
+               (64, 48), jnp.float64)
+    ladder = escalation_ladder(p)
+    reasons = [r for _, r in ladder]
+    assert reasons[0] == "as planned"
+    assert any("householder" in r for r in reasons)
+    assert any("runtime conditioning" in r for r in reasons)
+    # f64 plan: no f64 rung; consecutive configs never repeat
+    assert not any("float64" in r for r in reasons)
+    for (c1, _), (c2, _) in zip(ladder, ladder[1:]):
+        assert c1 != c2
+    # f32 compute adds the precision rung at the end
+    p32 = S.plan(S.SvdConfig(method="zolo_static", kappa=1e4,
+               l0_policy="estimate_at_plan"),
+                 (64, 48), jnp.float32)
+    assert escalation_ladder(p32)[-1][1] == "compute dtype -> float64"
+    assert escalation_ladder(p32)[-1][0].compute_dtype == "float64"
+
+
+def test_pallas_specs_declare_fallbacks():
+    for name, fb in (("zolo_pallas", "zolo_static"),
+                     ("zolo_pallas_dynamic", "zolo")):
+        spec = get_polar(name)
+        assert spec.fallback == fb
+        assert spec.kappa_max_f32 == PALLAS_F32_KAPPA_MAX
+    with pytest.raises(ValueError, match="loop"):
+        register_polar("self_loop",
+                       fallback="self_loop")(lambda a: None)
+
+
+# --- tentpole (d) + (b): fault injection through the real ladder -------------
+
+
+def test_faulty_ops_nan_recovers_up_the_ladder():
+    a = make_matrix(64, 48, kappa=1e4, seed=2)
+    ops = faulty_ops(nan_at_iter=0)
+    cfg = S.SvdConfig(method="zolo", qr_mode="cholqr2",
+                      extra=(("ops", ops),))
+    u, s, vh, trail = solve_with_escalation(a, cfg)
+    assert trail[0].outcome == "failed"
+    assert not trail[0].verdict.ok
+    assert trail[-1].outcome == "passed"
+    s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)
+    np.testing.assert_allclose(np.asarray(s), s_ref[:48], atol=1e-8)
+
+
+def test_faulty_ops_indefinite_gram_recovers():
+    a = make_matrix(64, 48, kappa=1e4, seed=4)
+    ops = faulty_ops(indefinite_at_iter=0)
+    cfg = S.SvdConfig(method="zolo", qr_mode="chol",
+                      extra=(("ops", ops),))
+    u, s, vh, trail = solve_with_escalation(a, cfg)
+    assert trail[0].outcome == "failed"
+    assert trail[-1].outcome == "passed"
+
+
+def test_exhausted_ladder_raises_solve_failure_with_trail():
+    a = make_matrix(64, 48, kappa=1e4, seed=5)
+
+    def broken(x, t, aw, mh):
+        return DEFAULT_OPS.polar_update(x, t, aw, mh) * float("nan")
+
+    cfg = S.SvdConfig(method="zolo",
+                      extra=(("ops",
+                              DEFAULT_OPS._replace(polar_update=broken)),))
+    with pytest.raises(SolveFailure) as ei:
+        solve_with_escalation(a, cfg)
+    trail = ei.value.trail
+    assert len(trail) >= 2
+    assert all(t.outcome in ("failed", "plan-error") for t in trail)
+    assert "non-finite" in str(ei.value)
+
+
+def test_batched_input_rejected():
+    with pytest.raises(ValueError, match="one \\(m, n\\) matrix"):
+        solve_with_escalation(jnp.zeros((2, 8, 8)), S.SvdConfig())
+
+
+# --- topk_adaptive escalates through the same ladder -------------------------
+
+
+def test_topk_adaptive_records_ladder_trail():
+    import repro.spectral as sp
+
+    a = make_matrix(96, 64, kappa=1e4, seed=6)
+    cfg = sp.TopKConfig(k=4, strategy="sketch", power_iters=0, tol=1e-10)
+    plan = sp.plan_topk(cfg, (96, 64), a.dtype)
+    # tol=0 forces the dense fallback; it must run verified and leave
+    # the rung trail in info
+    u, s, vh, info = plan.topk_adaptive(a, tol=0.0)
+    assert info["escalated"]
+    assert info["trail"][-1].outcome == "passed"
+    s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)
+    np.testing.assert_allclose(np.asarray(s), s_ref[:4], atol=1e-9)
+    assert u.shape == (96, 4) and vh.shape == (4, 64)
+
+
+# --- serving fault tolerance -------------------------------------------------
+
+
+def _fake_clock(t0=0.0):
+    t = [t0]
+
+    def clock():
+        return t[0]
+
+    return clock, t
+
+
+def _mat(m, n, seed=0):
+    return make_matrix(m, n, kappa=1e3, seed=seed)
+
+
+def test_scheduler_drop_preserves_fifo():
+    sched = MicroBatchScheduler(4, clock=lambda: 0.0)
+    for i in range(5):
+        sched.enqueue("k", i)
+    dropped = sched.drop(lambda x: x % 2 == 1)
+    assert dropped == [1, 3]
+    assert sched.pending() == 3
+    (_, items), = sched.ready(force=True)
+    assert items == [0, 2, 4]
+
+
+def test_dispatch_exception_fails_every_batched_future():
+    # satellite 1: an exception inside _dispatch used to leave batched
+    # futures pending forever
+    faults = ServiceFaults(dispatch_error_batches=(0,))
+    svc = SvdService(ServiceConfig(batch_size=2, faults=faults))
+    svc.warmup([(48, 32)])
+    f0, f1 = svc.submit(_mat(48, 32)), svc.submit(_mat(48, 32, seed=1))
+    svc.flush()
+    for f in (f0, f1):
+        assert f.done()
+        assert isinstance(f.exception(), RuntimeError)
+        with pytest.raises(RuntimeError, match="injected dispatch fault"):
+            f.result()
+    assert svc.stats()["dispatch_errors"] == 1
+
+
+def test_injected_nan_retries_on_next_rung_only_culprit():
+    faults = ServiceFaults(nan_request_seqs=(1,))
+    svc = SvdService(ServiceConfig(batch_size=2, max_retries=2,
+                                   faults=faults))
+    svc.warmup([(48, 32)])
+    f0 = svc.submit(_mat(48, 32))
+    f1 = svc.submit(_mat(48, 32, seed=1))
+    svc.flush()
+    u0, s0, _ = f0.result()
+    u1, s1, _ = f1.result()          # recovered via the retry lane
+    st = svc.stats()
+    assert st["health_failures"] == 1 and st["retries"] == 1
+    assert st["quarantined"] == 0
+    # the retried entry is a genuine SVD of its clean input
+    s_ref = np.linalg.svd(np.asarray(_mat(48, 32, seed=1)),
+                          compute_uv=False)
+    np.testing.assert_allclose(np.asarray(s1), s_ref, atol=1e-8)
+
+
+def test_poison_request_quarantined_with_trail():
+    svc = SvdService(ServiceConfig(batch_size=1, max_retries=2))
+    svc.warmup([(48, 32)])
+    poison = jnp.full((48, 32), float("nan"))
+    f = svc.submit(poison)
+    svc.flush()
+    exc = f.exception()
+    assert isinstance(exc, SolveFailure)
+    assert len(exc.trail) == 3       # rung 0 + max_retries
+    assert svc.stats()["quarantined"] == 1
+
+
+def test_deadline_and_backpressure():
+    clock, t = _fake_clock()
+    svc = SvdService(ServiceConfig(batch_size=4, deadline=0.5,
+                                   max_queue_depth=2), clock=clock)
+    svc.warmup([(48, 32)])
+    f0, f1 = svc.submit(_mat(48, 32)), svc.submit(_mat(48, 32, seed=1))
+    with pytest.raises(Backpressure):
+        svc.submit(_mat(48, 32, seed=2))
+    t[0] = 1.0                        # both expire while queued
+    svc.poll()
+    for f in (f0, f1):
+        assert isinstance(f.exception(), DeadlineExceeded)
+        with pytest.raises(DeadlineExceeded):
+            f.result()
+    st = svc.stats()
+    assert st["deadline_expired"] == 2 and st["shed"] == 1
+
+
+def test_circuit_breaker_opens_and_cools_down():
+    clock, t = _fake_clock()
+    faults = ServiceFaults(dispatch_error_batches=tuple(range(8)))
+    svc = SvdService(ServiceConfig(batch_size=1, breaker_threshold=2,
+                                   breaker_cooldown=10.0, faults=faults),
+                     clock=clock)
+    for _ in range(2):
+        svc.submit(_mat(48, 32))
+        svc.poll(force=True)
+    with pytest.raises(CircuitOpen):
+        svc.submit(_mat(48, 32))
+    st = svc.stats()
+    assert st["circuit_opens"] == 1 and st["circuit_rejects"] == 1
+    t[0] = 20.0                       # cooldown over: breaker closes
+    svc.submit(_mat(48, 32))
+
+
+def test_future_result_timeout(monkeypatch):
+    clock, t = _fake_clock()
+    svc = SvdService(ServiceConfig(batch_size=2), clock=clock)
+    f = svc.submit(_mat(48, 32))
+    # a scheduler that never dispatches: the future stays queued and
+    # result(timeout=) must raise instead of spinning forever
+    monkeypatch.setattr(svc._sched, "ready",
+                        lambda now=None, force=False: [])
+    with pytest.raises(FutureTimeout, match="still queued"):
+        f.result(timeout=0.0)
+    assert not f.done()               # still live: result() again is legal
+
+
+def test_skewed_clock_ages_deadlines():
+    clock, t = _fake_clock()
+    faults = ServiceFaults(clock_skew=100.0)
+    svc = SvdService(ServiceConfig(batch_size=4, faults=faults),
+                     clock=clock)
+    f = svc.submit(_mat(48, 32), deadline=50.0)  # already past, skewed
+    assert f.t_submit == 100.0
+    t[0] = 60.0
+    svc.poll()
+    assert isinstance(f.exception(), DeadlineExceeded)
+
+
+# --- satellite 4: the chaos acceptance test ----------------------------------
+
+
+def test_chaos_mixed_stream_drains_with_zero_hung_futures():
+    """Mixed serve stream with injected NaN solves, dispatch exceptions
+    and deadline-expired requests drains completely: every future
+    resolves to a result or a typed error, none hang, and stats()
+    accounts for each recovery path."""
+    clock, t = _fake_clock()
+    # dispatch order: batch 0 = [clean, nan-injected], batch 1 = retry
+    # of the injected entry, batch 2 = the dispatch-error pair, then
+    # the poison request's rung 0-2 solo batches
+    faults = ServiceFaults(nan_request_seqs=(1,),
+                           dispatch_error_batches=(2,))
+    svc = SvdService(ServiceConfig(batch_size=2, max_retries=2,
+                                   max_queue_depth=4,
+                                   breaker_threshold=99, faults=faults),
+                     clock=clock)
+    svc.warmup([(48, 32)])
+
+    futures = {}
+    futures["ok"] = svc.submit(_mat(48, 32))                    # seq 0
+    futures["injected"] = svc.submit(_mat(48, 32, seed=1))      # seq 1
+    svc.flush()                                     # batches 0 and 1
+
+    futures["derr_a"] = svc.submit(_mat(48, 32, seed=2))
+    futures["derr_b"] = svc.submit(_mat(48, 32, seed=3))
+    svc.flush()                                     # batch 2: raises
+
+    futures["poison"] = svc.submit(jnp.full((48, 32), float("nan")))
+    svc.flush()                                     # batches 3..5
+
+    futures["late"] = svc.submit(_mat(48, 32, seed=4), deadline=0.5)
+    t[0] = 1.0
+    svc.flush()
+
+    futures["tail"] = svc.submit(_mat(48, 32, seed=5))
+    with pytest.raises(Backpressure):
+        for _ in range(10):
+            futures.setdefault("shed", svc.submit(_mat(48, 32, seed=6)))
+            futures.pop("shed")
+    svc.flush()
+
+    # --- the acceptance bar: zero hung futures -----------------------
+    assert all(f.done() for f in futures.values())
+    assert svc.pending() == 0 and svc.stats()["inflight"] == 0
+
+    for name in ("ok", "injected", "tail"):
+        u, s, vh, = futures[name].result()
+        assert np.all(np.isfinite(np.asarray(s)))
+        assert futures[name].exception() is None
+    assert isinstance(futures["derr_a"].exception(), RuntimeError)
+    assert isinstance(futures["derr_b"].exception(), RuntimeError)
+    assert isinstance(futures["poison"].exception(), SolveFailure)
+    assert len(futures["poison"].exception().trail) == 3
+    assert isinstance(futures["late"].exception(), DeadlineExceeded)
+
+    st = svc.stats()
+    assert st["retries"] == 3          # 1 injected + 2 poison climbs
+    assert st["health_failures"] == 4  # injected rung 0 + poison x3
+    assert st["quarantined"] == 1
+    assert st["dispatch_errors"] == 1
+    assert st["deadline_expired"] == 1
+    assert st["shed"] >= 1
+    # recovered entry is bit-for-bit a healthy solve of the clean input
+    s_ref = np.linalg.svd(np.asarray(_mat(48, 32, seed=1)),
+                          compute_uv=False)
+    np.testing.assert_allclose(
+        np.asarray(futures["injected"].result()[1]), s_ref, atol=1e-8)
