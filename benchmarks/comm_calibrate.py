@@ -39,32 +39,29 @@ if __name__ == "__main__":
     os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 
-def _calibrate():
+def _calibrate_dtype(dtype, mesh, ndev, n):
+    """Measure one dtype's (matmul flop rate, psum cost records,
+    suggested flops-per-word).  A psum word is one element of the
+    reduced array — bf16 words are half the bytes of f32 words, so the
+    flop-equivalent cost per word genuinely differs per dtype (that is
+    what a bf16 compute plan's cost model should be fed)."""
     import jax
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from repro.dist import zolo_group_mesh
-    from benchmarks.common import BENCH_N, emit, time_fn
+    from benchmarks.common import emit, time_fn
 
-    ndev = jax.device_count()
-    n = min(BENCH_N, 256)
-    dtype = jnp.float64
-    word_bytes = jnp.dtype(dtype).itemsize
+    name = jnp.dtype(dtype).name
 
     # --- compute rate: the flop side of the flop-equivalent ----------
     a = jnp.ones((n, n), dtype)
     t_mm = time_fn(jax.jit(lambda x: x @ x), a)
     flop_rate = 2.0 * n ** 3 / t_mm  # flops / s
-    emit("comm_calibrate.matmul_rate", t_mm * 1e6,
+    emit(f"comm_calibrate.matmul_rate_{name}", t_mm * 1e6,
          f"n={n};flops_per_s={flop_rate:.3e}")
 
     # --- collective rate: psum wall-clock per word on the local mesh --
-    # the "sep" axis spans every device (zolo_group_mesh(1)), matching
-    # the Gram-reduction collective of a maximally-distributed group
-    mesh = zolo_group_mesh(1)
-
     records = []
     for words in (64 * 64, 128 * 128, 256 * 256):
         side = int(words ** 0.5)
@@ -82,30 +79,73 @@ def _calibrate():
         t_ps = time_fn(allreduce, x)
         per_word = t_ps / words
         flops_per_word = per_word * flop_rate
-        emit(f"comm_calibrate.psum_{side}x{side}", t_ps * 1e6,
+        emit(f"comm_calibrate.psum_{side}x{side}_{name}", t_ps * 1e6,
              f"words={words};flops_per_word={flops_per_word:.1f}")
         records.append({"words": words, "us_per_psum": t_ps * 1e6,
                         "flops_per_word": flops_per_word})
 
     # suggest the mid-size measurement (small psums are latency-bound,
     # large ones bandwidth-bound; the Gram reduction sits in between)
-    suggested = sorted(r["flops_per_word"] for r in records)[len(records) // 2]
+    suggested = sorted(r["flops_per_word"]
+                       for r in records)[len(records) // 2]
+    return flop_rate, records, suggested
+
+
+def _calibrate():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist import zolo_group_mesh
+    from benchmarks.common import BENCH_N, emit
+
+    ndev = jax.device_count()
+    n = min(BENCH_N, 256)
+
+    # the "sep" axis spans every device (zolo_group_mesh(1)), matching
+    # the Gram-reduction collective of a maximally-distributed group
+    mesh = zolo_group_mesh(1)
+
+    # per-dtype calibration: f64 (the committed reference), f32 and
+    # bf16 (the compute_dtype production precisions — their psum words
+    # are narrower, and on real interconnects the flop-equivalent cost
+    # per word is not the f64 value scaled by itemsize)
+    per_dtype = {}
+    for dtype in (jnp.float64, jnp.float32, jnp.bfloat16):
+        name = jnp.dtype(dtype).name
+        flop_rate, records, suggested = _calibrate_dtype(dtype, mesh,
+                                                         ndev, n)
+        per_dtype[name] = {
+            "word_bytes": jnp.dtype(dtype).itemsize,
+            "matmul_flops_per_s": flop_rate,
+            "records": records,
+            "comm_flops_per_word": suggested,
+        }
+
+    ref = per_dtype["float64"]
     record = {
         "suite": "comm_calibrate",
         "backend": jax.default_backend(),
         "ndev": ndev,
-        "dtype": str(jnp.dtype(dtype)),
-        "word_bytes": word_bytes,
-        "matmul_flops_per_s": flop_rate,
-        "records": records,
-        "comm_flops_per_word": suggested,
+        # top-level keys stay the f64 reference calibration (the shape
+        # earlier consumers of BENCH_comm.json read); per-dtype rows
+        # live under "dtypes"
+        "dtype": "float64",
+        "word_bytes": ref["word_bytes"],
+        "matmul_flops_per_s": ref["matmul_flops_per_s"],
+        "records": ref["records"],
+        "comm_flops_per_word": ref["comm_flops_per_word"],
+        "dtypes": per_dtype,
         "usage": "SvdConfig(extra=(('comm_flops_per_word', "
-                 f"{suggested:.1f}),))",
+                 f"{ref['comm_flops_per_word']:.1f}),)) — or export "
+                 "REPRO_COMM_FLOPS_PER_WORD=<value> to rebase the "
+                 "DEFAULT_COMM_FLOPS_PER_WORD prior for every plan "
+                 "in the process",
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=2)
     emit("comm_calibrate.json_record", 0.0,
-         f"{BENCH_JSON};comm_flops_per_word={suggested:.1f}")
+         f"{BENCH_JSON};comm_flops_per_word="
+         f"{ref['comm_flops_per_word']:.1f}")
 
 
 def run():

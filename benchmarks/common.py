@@ -54,18 +54,20 @@ def make_matrix(n: int, kappa: float, m: int = None, seed: int = 0,
     return jnp.asarray((u * s) @ v.T, dtype=dtype)
 
 
-def kernel_vs_xla_polar(a, *, l0, r=2):
+def kernel_vs_xla_polar(a, *, l0, r=2, compute_dtype=None):
     """Time the kernel-backed (zolo_pallas) vs XLA (zolo_static) polar
     solve of the pre-scaled matrix ``a`` through ``repro.solver`` plans.
 
     One comparison protocol for every suite (kernels, pd_compare):
     returns (t_xla_s, t_ker_s, max_abs_err, kernel_plan).
+    ``compute_dtype`` threads the config's precision override into both
+    plans (the bf16-envelope rows of the kernels suite).
     """
     import jax.numpy as jnp
 
     import repro.solver as S
 
-    cfg_kw = dict(l0=l0, r=r, scale="none")
+    cfg_kw = dict(l0=l0, r=r, scale="none", compute_dtype=compute_dtype)
     p_xla = S.plan(S.SvdConfig(method="zolo_static", **cfg_kw),
                    a.shape, a.dtype)
     p_ker = S.plan(S.SvdConfig(method="zolo_pallas", **cfg_kw),

@@ -67,14 +67,38 @@ def run():
     end_to_end()
 
 
+def _selected_tiles(m, n, dtype):
+    """The tile sizes the wrappers will actually run for this problem:
+    the backend-default requests shrunk by ``_pick_tile`` under the
+    dtype's MXU lane alignment (bf16 packs 256 lanes per native tile
+    where f32 packs 128 — the alignment bug this suite regression-guards
+    by asserting every recorded row's tiles)."""
+    from repro.kernels.ops import _pick_tile, _tile_align
+
+    align = _tile_align(dtype)
+    requested = {"bn": 256, "bk": 512, "bm": 256}
+    selected = {"bn": _pick_tile(n, requested["bn"], align),
+                "bk": _pick_tile(m, requested["bk"], align),
+                "bm": _pick_tile(m, requested["bm"], align)}
+    for k, t in selected.items():
+        if t % align:
+            raise RuntimeError(
+                f"selected tile {k}={t} breaks the {align}-lane MXU "
+                f"alignment for {jnp.dtype(dtype).name} — the dtype-"
+                f"aware _pick_tile contract regressed")
+    return requested, selected, align
+
+
 def end_to_end():
-    """zolo_pallas vs zolo_static through repro.solver plans: the full
-    polar solve, kernel ops vs XLA ops, parity + wall-clock, written to
-    BENCH_kernels.json.  Interpret-mode wall-clock only shows the
-    Python-execution overhead on CPU; the JSON records the backend so a
-    TPU run of the same file is directly comparable."""
+    """zolo_pallas vs zolo_static through repro.solver plans, one row
+    per compute precision (f32 and bf16): the full polar solve, kernel
+    ops vs XLA ops, wall-clock + parity against the f64 oracle polar
+    factor, written to BENCH_kernels.json.  Interpret-mode wall-clock
+    only shows the Python-execution overhead on CPU — each row carries
+    the ``interpret`` tag so CPU CI reads the rows as parity-only and a
+    TPU run of the same file is the performance artifact (acceptance
+    there: the bf16 row's solve >= 1.5x the f32 row's)."""
     from repro.core import orthogonality
-    from repro.kernels.ops import _pick_tile
     from benchmarks.common import kernel_vs_xla_polar
 
     n = min(BENCH_N, 256)
@@ -84,22 +108,40 @@ def end_to_end():
     u, _ = np.linalg.qr(rng.standard_normal((m, n)))
     v, _ = np.linalg.qr(rng.standard_normal((n, n)))
     s = np.geomspace(1.0, 1.0 / kappa, n)
-    a = jnp.asarray((u * s) @ v.T, jnp.float32)
-
-    t_xla, t_ker, err, p_ker = kernel_vs_xla_polar(a, l0=0.9 / kappa, r=2)
-    q_ker = p_ker.polar(a, want_h=False)[0]
+    a64 = (u * s) @ v.T
+    q64 = u @ v.T  # exact polar factor: the f64 parity oracle
+    a = jnp.asarray(a64, jnp.float32)
     backend = jax.default_backend()
     interpret = backend != "tpu"
-    emit("kernels.zolo_pallas.end_to_end_vs_xla", t_ker * 1e6,
-         f"xla={t_xla * 1e6:.1f}us;max_err={err:.2e};"
-         f"interpret={interpret}")
 
-    # the backend-default tile *requests*; _pick_tile shrinks them to
-    # divide the padded problem — record what actually ran
-    requested = {"bn": 256, "bk": 512, "bm": 256}
-    selected = {"bn": _pick_tile(n, requested["bn"]),
-                "bk": _pick_tile(m, requested["bk"]),
-                "bm": _pick_tile(m, requested["bm"])}
+    rows = []
+    for compute in ("float32", "bfloat16"):
+        t_xla, t_ker, err_xla, p_ker = kernel_vs_xla_polar(
+            a, l0=0.9 / kappa, r=2,
+            compute_dtype=None if compute == "float32" else compute)
+        q_ker = p_ker.polar(a, want_h=False)[0]
+        # oracle parity on the host in f64 (device x64 may be disabled)
+        err_f64 = float(np.abs(np.asarray(q_ker, np.float64) - q64).max())
+        requested, selected, align = _selected_tiles(
+            m, n, jnp.dtype(compute))
+        emit(f"kernels.zolo_pallas.end_to_end_{compute}", t_ker * 1e6,
+             f"xla={t_xla * 1e6:.1f}us;max_err_vs_f64={err_f64:.2e};"
+             f"interpret={interpret}")
+        rows.append({
+            "compute_dtype": compute,
+            "interpret": interpret,
+            "iterations": len(p_ker.schedule),
+            "lane_align": align,
+            "tiles_requested": requested,
+            "tiles_selected": selected,
+            "zolo_static_us": t_xla * 1e6,
+            "zolo_pallas_us": t_ker * 1e6,
+            "max_err_vs_f64_oracle": err_f64,
+            "max_err_vs_xla": err_xla,
+            "orth_zolo_pallas": float(orthogonality(q_ker)),
+        })
+
+    f32_row, bf16_row = rows
     record = {
         "suite": "kernels_end_to_end",
         "backend": backend,
@@ -108,13 +150,12 @@ def end_to_end():
         "dtype": "float32",
         "kappa": kappa,
         "r": 2,
-        "iterations": len(p_ker.schedule),
-        "tiles_requested": requested,
-        "tiles_selected": selected,
-        "zolo_static_us": t_xla * 1e6,
-        "zolo_pallas_us": t_ker * 1e6,
-        "max_err_vs_xla": err,
-        "orth_zolo_pallas": float(orthogonality(q_ker)),
+        # rows are per compute precision; on TPU the interesting derived
+        # number is the bf16 row's speedup over f32 (CPU interpret rows
+        # are parity-only — Python-executed kernel bodies time nothing)
+        "rows": rows,
+        "bf16_speedup_vs_f32": (f32_row["zolo_pallas_us"]
+                                / bf16_row["zolo_pallas_us"]),
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=2)

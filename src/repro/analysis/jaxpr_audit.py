@@ -281,10 +281,12 @@ def expected_grouped_psums(
         else:
             first_sep = MODE_SEP_PSUMS[first_mode]
             first_zolo = 1
-        # + 2 fnorm psums for the peeled residual, + (1 Gram + 2 fnorm)
-        # per while-loop body, + 1 "zolo" combine in the body
+        # + 1 fused fnorm_pair psum for the peeled residual (the two
+        # residual-rule norms ride one length-2 all-reduce; see
+        # sep_reduce_ops.fnorm_pair), + (1 Gram + 1 fnorm_pair) per
+        # while-loop body, + 1 "zolo" combine in the body
         return {
-            "sep": est + first_sep + 2 + 3,
+            "sep": est + first_sep + 1 + 2,
             "zolo": first_zolo + 1,
         }
     return None

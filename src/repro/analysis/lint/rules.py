@@ -24,6 +24,12 @@ bare-assert         PR 5: library ``assert`` vanishes under ``python
 keyerror-dispatch   PR 3: registry dispatch through ``TABLE[name]``
                     surfaces an unactionable ``KeyError: 'zolo'``
                     instead of naming the known choices.
+kernel-accum-       ROADMAP 4: a Pallas kernel that accepts sub-f32
+envelope            operands but leaves an MXU product's accumulator
+                    unpinned accumulates bf16 on TPU, and a kernel
+                    module without a declared accumulator dtype and
+                    envelope registration leaves the planner/health
+                    judge nothing to gate its precision on.
 ==================  =====================================================
 
 Heuristics are deliberately precision-first: variable-valued arguments
@@ -534,9 +540,93 @@ class KeyErrorDispatchRule:
                         f"raises bare KeyError naming no valid choices")
 
 
+# ---------------------------------------------------------------------------
+# kernel-accum-envelope
+
+
+class KernelAccumEnvelopeRule:
+    """Pallas kernel bodies must pin accumulation and declare an envelope.
+
+    A kernel function is recognized structurally: two or more ``*_ref``
+    parameters (pallas_call hands operands and outputs over as Refs).
+    Such kernels may be handed sub-f32 operands (the bf16 envelope
+    work), so two contracts apply:
+
+    * every MXU product inside the body (``dot``/``dot_general``/
+      ``einsum``/``matmul``) must pin ``preferred_element_type`` — an
+      unpinned product accumulates in the operand dtype on TPU, which
+      for bf16 inputs silently loses the f32 accumulation the envelope
+      table was measured under;
+    * the defining module must bind a module-level accumulator-dtype
+      constant (a name containing ``ACCUM_DTYPE``) and an envelope
+      registration pointer (a name containing ``ENVELOPE``), so the
+      recorded precision contract is discoverable next to the kernel it
+      governs rather than only in the planner.
+    """
+
+    name = "kernel-accum-envelope"
+    doc = ("Pallas kernels taking sub-f32-capable Ref operands must pin "
+           "preferred_element_type on MXU products and their module must "
+           "declare *_ACCUM_DTYPE and an *ENVELOPE registration")
+
+    PRODUCTS = {"dot", "dot_general", "einsum", "matmul"}
+
+    def _kernel_fns(self, ctx: FileContext) -> List[ast.FunctionDef]:
+        out = []
+        for fn in _functions(ctx.tree):
+            params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                      + fn.args.kwonlyargs)]
+            if sum(1 for p in params if p.endswith("_ref")) >= 2:
+                out.append(fn)
+        return out
+
+    def _module_binds(self, ctx: FileContext, fragment: str) -> bool:
+        for node in ctx.tree.body:  # module top level only
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):
+                targets = [node.target]
+            for tgt in targets:
+                if isinstance(tgt, ast.Name) and fragment in tgt.id:
+                    return True
+        return False
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        kernels = self._kernel_fns(ctx)
+        if not kernels:
+            return
+        for fn in kernels:
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                tail = _call_name(node).rsplit(".", 1)[-1]
+                if tail in self.PRODUCTS \
+                        and _kwarg(node, "preferred_element_type") is None:
+                    yield ctx.finding(
+                        node, self.name,
+                        f"{tail} inside kernel {fn.name}() without "
+                        f"preferred_element_type: sub-f32 operands would "
+                        f"accumulate in their own dtype, off the envelope "
+                        f"the kernel was measured under")
+        if not self._module_binds(ctx, "ACCUM_DTYPE"):
+            yield ctx.finding(
+                kernels[0], self.name,
+                "kernel module declares no *_ACCUM_DTYPE constant: the "
+                "accumulator precision the envelope was measured under "
+                "must be stated next to the kernel")
+        if not self._module_binds(ctx, "ENVELOPE"):
+            yield ctx.finding(
+                kernels[0], self.name,
+                "kernel module declares no *ENVELOPE registration "
+                "pointer: the planner/health judge gate sub-f32 use on "
+                "a recorded kappa envelope — name where it lives")
+
+
 register_rule(CollectiveAxisRule())
 register_rule(AccumDtypeRule())
 register_rule(PlanKeyHygieneRule())
 register_rule(RetraceHazardRule())
 register_rule(BareAssertRule())
 register_rule(KeyErrorDispatchRule())
+register_rule(KernelAccumEnvelopeRule())

@@ -25,6 +25,20 @@ def frobenius(a):
     return jnp.sqrt(jnp.sum(jnp.abs(a) ** 2))
 
 
+def frobenius_pair(a, b):
+    """(||a||_F, ||b||_F) as one stacked length-2 vector.
+
+    The single-process default behind the ``ZoloOps.fnorm_pair`` slot.
+    Distributed bundles override it so both sums-of-squares ride ONE
+    "sep" all-reduce instead of two — the dynamic driver's residual test
+    (||X1 - X0||_F vs ||X1||_F) is the caller, once peeled and once per
+    while-loop body, so the fusion removes one collective per iteration
+    from the convergence-check critical path.
+    """
+    return jnp.sqrt(jnp.stack([jnp.sum(jnp.abs(a) ** 2),
+                               jnp.sum(jnp.abs(b) ** 2)]))
+
+
 def sigma_max_upper(a):
     """Guaranteed upper bound on sigma_max: min(sqrt(||A||_1 ||A||_inf), ||A||_F)."""
     n1 = jnp.max(jnp.sum(jnp.abs(a), axis=-2))

@@ -111,6 +111,11 @@ class PolarSpec:
     kappa_max_f32: Optional[float] = None  # sub-f64 conditioning envelope;
                                            # runtime kappa_est beyond it is
                                            # judged unhealthy
+    # per-(input dtype, accum dtype) conditioning envelope widening
+    # kappa_max_f32: {("bfloat16", "float32"): 1e3, ...}.  Resolved by
+    # envelope_kappa_max(); kappa_max_f32 stays the ("float32",
+    # "float32") default so existing registrations keep their meaning.
+    kappa_envelope: Optional[Dict] = None
     description: str = ""
 
 
@@ -150,6 +155,7 @@ def register_polar(name: str, *, supports_grouped: bool = False,
                    flops_fn: Callable = None, plan_fn: Callable = None,
                    fallback: Optional[str] = None,
                    kappa_max_f32: Optional[float] = None,
+                   kappa_envelope: Optional[Dict] = None,
                    description: str = ""):
     """Decorator registering ``fn(a, **kw) -> (q, h, info)`` under ``name``."""
 
@@ -172,6 +178,7 @@ def register_polar(name: str, *, supports_grouped: bool = False,
             grouped_fn=grouped_fn,
             flops_fn=flops_fn, plan_fn=plan_fn,
             fallback=fallback, kappa_max_f32=kappa_max_f32,
+            kappa_envelope=kappa_envelope,
             description=description)
         return fn
 
@@ -190,6 +197,39 @@ def register_eig(name: str, *, flops_fn: Callable = None,
         return fn
 
     return deco
+
+
+def envelope_kappa_max(spec: PolarSpec, dtype,
+                       accum: str = "float32") -> Optional[float]:
+    """Resolve a backend's conditioning envelope for a compute dtype.
+
+    ``dtype`` is duck-typed (anything with ``.name`` / ``.itemsize``,
+    e.g. a ``jnp.dtype`` — this module stays jax-free) and names the
+    *input* precision the kernels see; ``accum`` the accumulator dtype
+    (f32 for every Pallas kernel in :mod:`repro.kernels`).
+
+    Resolution, strictest-sufficient first:
+
+    * itemsize >= 8 — no sub-f64 envelope applies: ``None``.
+    * exact ``(input, accum)`` hit in ``spec.kappa_envelope``.
+    * sub-f32 input with an envelope table but no entry — fail CLOSED to
+      the table's minimum: an unmeasured narrow dtype must never inherit
+      a wider dtype's cap.
+    * otherwise ``spec.kappa_max_f32`` (the pre-envelope behavior, so
+      backends without a table are unchanged).
+    """
+    name = getattr(dtype, "name", str(dtype))
+    itemsize = int(getattr(dtype, "itemsize", 8))
+    if itemsize >= 8:
+        return None
+    env = spec.kappa_envelope
+    if env:
+        key = (name, accum)
+        if key in env:
+            return env[key]
+        if itemsize < 4:
+            return min(env.values())
+    return spec.kappa_max_f32
 
 
 def get_polar(name: str) -> PolarSpec:

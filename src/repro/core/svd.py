@@ -13,6 +13,7 @@ one-sided (Hestenes) block-Jacobi SVD.
 from __future__ import annotations
 
 import functools
+import types
 from typing import Optional
 
 import jax
@@ -25,6 +26,7 @@ from repro.core import norms as _norms
 from repro.core import qdwh as _qdwh
 from repro.core import zolo as _zolo
 from repro.core import zolo_pallas as _zolo_pallas
+from repro.core import registry as _registry
 from repro.core.registry import register_eig, register_polar
 
 
@@ -127,7 +129,50 @@ def _zolo_grouped_dynamic_flops(m, n, *, r, kappa, grouped=False,
 # Measured edge (n=256, geometric spectrum, r=2): clean at kappa = 2e4,
 # NaN from 3e4 on; the ceiling sits at the last clean decade so a plan
 # fails loudly *before* the breakdown instead of at it.
+#
+# Since the kernel-side shift clamp landed (ROADMAP 4a: the shifted-Gram
+# c is ridged against eps(f32) * max diag G inside the kernel) the f32
+# path stays finite and orth-clean well past 2e4 (measured through 1e6),
+# so the cap below is now an *accuracy* contract rather than a NaN
+# cliff — it is kept at the recorded value because the envelope is what
+# plans, judges, and tests all key on.
 PALLAS_F32_KAPPA_MAX = 2.0e4
+
+# bf16-input kernels (f32 accumulation) envelope, measured on the same
+# n=256 geometric-spectrum sweep through the Pallas static path: the
+# factors stay at bf16-native accuracy (orth ~ eps_bf16, top-half
+# singular values within ~2 eps_bf16 relative) through kappa = 1e4,
+# drift to ~1.2e-2 by 1e5 and ~5e-2 by 1e6.  The cap sits at the last
+# bf16-accurate decade, and deliberately at or below the f32 cap so the
+# fail-closed min() rule for unmeasured narrow dtypes
+# (repro.core.registry.envelope_kappa_max) can never resolve wider than
+# a measured entry.
+PALLAS_BF16_KAPPA_MAX = 1.0e4
+
+# The per-(input dtype, accum dtype) envelope table.  Registered on the
+# Pallas specs (kappa_envelope=) so the planner's pricing, the plan_fn
+# fail-loud check, and the runtime health judge
+# (repro.resilience.health.judge_plan) all resolve one table through
+# repro.core.registry.envelope_kappa_max.
+PALLAS_KAPPA_ENVELOPE = {
+    ("float32", "float32"): PALLAS_F32_KAPPA_MAX,
+    ("bfloat16", "float32"): PALLAS_BF16_KAPPA_MAX,
+}
+
+# envelope_kappa_max takes a spec-shaped object; this view lets the
+# pricing helpers below resolve the table *before* (and independent of)
+# the registrations at the bottom of this module.
+_PALLAS_ENVELOPE_VIEW = types.SimpleNamespace(
+    kappa_envelope=PALLAS_KAPPA_ENVELOPE,
+    kappa_max_f32=PALLAS_F32_KAPPA_MAX)
+
+
+def _pallas_kappa_cap(dtype) -> Optional[float]:
+    """Conditioning cap for a Pallas compute dtype (None: no sub-f64
+    cap applies), resolved through the same registry helper the health
+    judge uses — one resolution rule, never two."""
+    return _registry.envelope_kappa_max(_PALLAS_ENVELOPE_VIEW,
+                                        jnp.dtype(dtype))
 
 
 def _pallas_penalty(base, dtype):
@@ -141,27 +186,40 @@ def _pallas_penalty(base, dtype):
     ``method="auto"``.  On TPU at the requested precision the fused
     kernels cut HBM traffic (the +cI and the r-term combine stop being
     separate full-array passes), modeled as a small discount so auto
-    prefers the kernel path at equal flops.
+    prefers the kernel path at equal flops — and bf16 compute plans get
+    the MXU's double feed rate on top (the kernels stream bf16 operands
+    and accumulate f32, so the same tile schedule moves twice the
+    elements per cycle), which is what makes ``method="auto"`` under
+    ``compute_dtype="bfloat16"`` pick the kernel path inside its
+    envelope.
     """
     penalty = 1.0
     if jax.default_backend() != "tpu":
         penalty *= 1e3  # interpret mode
     if dtype is not None and jnp.dtype(dtype).itemsize > 4:
         penalty *= 1e3  # f32-accumulating kernels on an f64 plan
-    if penalty == 1.0:
-        return base * 0.95  # fused-kernel HBM saving on TPU
-    return base * penalty
+    if penalty != 1.0:
+        return base * penalty
+    base *= 0.95  # fused-kernel HBM saving on TPU
+    if dtype is not None and jnp.dtype(dtype).itemsize == 2:
+        base *= 0.5  # bf16 MXU feed rate: ~2x f32 on the same tiles
+    return base
 
 
 def _pallas_envelope_priced(flops, kappa, dtype):
-    """Price the f32 NaN envelope into auto scoring: a sub-f64 plan
-    beyond :data:`PALLAS_F32_KAPPA_MAX` would raise in the backend's
-    plan_fn (fail-loud), so auto must never select it — an unpriced
-    candidate that then errors would make ``method="auto"`` unusable at
-    high conditioning on TPU.  Infinity keeps the spec scoreable (and
-    explicitly plannable, where the plan_fn raises the real error)."""
-    if dtype is not None and jnp.dtype(dtype).itemsize < 8 \
-            and kappa is not None and float(kappa) > PALLAS_F32_KAPPA_MAX:
+    """Price the conditioning envelope into auto scoring: a sub-f64
+    plan beyond its compute dtype's :data:`PALLAS_KAPPA_ENVELOPE` cap
+    would raise in the backend's plan_fn (fail-loud), so auto must
+    never select it — an unpriced candidate that then errors would make
+    ``method="auto"`` unusable at high conditioning on TPU.  Infinity
+    keeps the spec scoreable (and explicitly plannable, where the
+    plan_fn raises the real error).  ``dtype`` is the effective compute
+    dtype (``compute_dtype`` when set, plan dtype otherwise), so a bf16
+    compute plan is priced against the bf16 cap, not f32's."""
+    if dtype is None or kappa is None:
+        return flops
+    cap = _pallas_kappa_cap(dtype)
+    if cap is not None and float(kappa) > cap:
         return float("inf")
     return flops
 
@@ -273,25 +331,33 @@ def _newton_planfn(res):
 
 
 def _pallas_envelope_planfn(inner):
-    """Wrap a Pallas binding's plan_fn with the f32-envelope check.
+    """Wrap a Pallas binding's plan_fn with the precision-envelope check.
 
     Raises at plan time — not as runtime NaNs — when a Pallas backend is
-    planned in sub-f64 precision at conditioning beyond
-    :data:`PALLAS_F32_KAPPA_MAX`.  Dynamic plans without a kappa/l0 hint
-    pass through (their conditioning only exists at execution time)."""
+    planned in sub-f64 compute precision at conditioning beyond its
+    dtype's :data:`PALLAS_KAPPA_ENVELOPE` cap.  The effective compute
+    dtype is ``res.compute_dtype`` when the config sets one, the plan
+    dtype otherwise.  Dynamic plans without a kappa/l0 hint pass through
+    (their conditioning only exists at execution time; the runtime
+    health judge applies the same table there)."""
 
     @functools.wraps(inner)
     def planfn(res):
-        if jnp.dtype(res.dtype).itemsize < 8 and res.kappa is not None \
-                and float(res.kappa) > PALLAS_F32_KAPPA_MAX:
+        compute = getattr(res, "compute_dtype", None)
+        eff = jnp.dtype(compute) if compute is not None \
+            else jnp.dtype(res.dtype)
+        cap = _pallas_kappa_cap(eff)
+        if cap is not None and res.kappa is not None \
+                and float(res.kappa) > cap:
             raise ValueError(
                 f"{res.method!r} planned at kappa={res.kappa:.3g} in "
-                f"{jnp.dtype(res.dtype).name}: beyond the Pallas f32 "
-                f"NaN envelope (kappa <= {PALLAS_F32_KAPPA_MAX:.0e} — "
-                f"the f32-accumulated shifted Gram goes indefinite and "
-                f"Cholesky returns NaN; ROADMAP item 4a).  Plan in "
-                f"float64, lower the kappa/l0 hint, or use a non-Pallas "
-                f"backend (e.g. 'zolo_static', 'zolo')")
+                f"{eff.name}: beyond the Pallas f32 NaN envelope "
+                f"(kappa <= {cap:.0e} for {eff.name} inputs — the "
+                f"f32-accumulated shifted Gram loses the spectrum's "
+                f"tail and accuracy silently degrades past the recorded "
+                f"edge; ROADMAP item 4).  Plan in float64, lower the "
+                f"kappa/l0 hint, or use a non-Pallas backend (e.g. "
+                f"'zolo_static', 'zolo')")
         return inner(res)
 
     return planfn
@@ -326,6 +392,7 @@ register_polar("zolo_pallas",
                flops_fn=_zolo_pallas_flops,
                plan_fn=_pallas_envelope_planfn(_zolo_static_planfn),
                fallback="zolo_static", kappa_max_f32=PALLAS_F32_KAPPA_MAX,
+               kappa_envelope=PALLAS_KAPPA_ENVELOPE,
                description="Pallas kernel-backed trace-time Zolo-PD "
                            "(fused Gram + r-term combine; compiled on "
                            "TPU, interpret mode elsewhere)")(
@@ -334,6 +401,7 @@ register_polar("zolo_pallas_dynamic", dynamic=True,
                flops_fn=_zolo_pallas_dynamic_flops,
                plan_fn=_pallas_envelope_planfn(_zolo_dynamic_planfn),
                fallback="zolo", kappa_max_f32=PALLAS_F32_KAPPA_MAX,
+               kappa_envelope=PALLAS_KAPPA_ENVELOPE,
                description="Pallas kernel-backed dynamic Zolo-PD "
                            "(in-graph coefficients; the kernel hot "
                            "loops inside the while_loop — compiled on "

@@ -64,6 +64,32 @@ from repro.core.qdwh import PolarInfo, form_h
 from repro.core.structured_qr import structured_qr_q1q2 as _structured_qr_q1q2
 
 
+# Ridge floor multiplier for the shifted-Gram coefficient in sub-f64
+# iterates: c is clamped to >= factor * eps(accum dtype) * max diag(G)
+# before Z = G + cI is factorized.  At kappa >~ 1e4 the odd Zolotarev
+# shifts fall below the Gram's eps-level negative eigenvalue noise and
+# the Cholesky goes indefinite (NaN); an eps-of-the-accumulator ridge is
+# below G's own rounding error so clean solves are unperturbed.  Keep in
+# sync with ``repro.kernels.gram.SHIFT_RIDGE_FACTOR`` (the in-kernel
+# clamp on the fused shifted-Gram path).
+SHIFT_RIDGE_FACTOR = 8.0
+
+
+def _clamp_shift(c_odd, g, dtype):
+    """Shift clamp: ridge positive Gram shifts for itemsize <= 4 iterates.
+
+    f64 numerics are untouched — the f64 dynamic driver runs shifts of
+    ~1e-20 at kappa 1e10 today, far below any eps-level floor, and
+    clamping them would change converged results."""
+    if jnp.dtype(dtype).itemsize > 4:
+        return c_odd
+    accum = jnp.promote_types(dtype, jnp.float32)
+    diag_max = jnp.max(jnp.diagonal(g, axis1=-2, axis2=-1))
+    floor = (SHIFT_RIDGE_FACTOR * jnp.finfo(accum).eps
+             * jnp.maximum(diag_max, 0.0)).astype(c_odd.dtype)
+    return jnp.where(c_odd > 0, jnp.maximum(c_odd, floor), c_odd)
+
+
 def _gram(x, c=0.0):
     """G = X^T X (+ c I) with f32-or-better accumulation."""
     g = jnp.einsum("...mk,...mn->...kn", x, x,
@@ -72,13 +98,20 @@ def _gram(x, c=0.0):
     if isinstance(c, (int, float)) and c == 0.0:
         return g
     n = x.shape[-1]
-    return g + jnp.asarray(c, g.dtype) * jnp.eye(n, dtype=g.dtype)
+    # the f32-accumulated shifted Gram gets the same shift clamp as the
+    # Pallas kernel (f64 accumulation passes through _clamp_shift intact)
+    c_arr = _clamp_shift(jnp.asarray(c, g.dtype), g, g.dtype)
+    return g + c_arr * jnp.eye(n, dtype=g.dtype)
 
 
 def _polar_update(x, t, a, mhat):
-    """X2 = mhat * (X + sum_j a_j T_j) over stacked terms t: (r, ..., m, n)."""
-    s = jnp.einsum("j,j...mn->...mn", a.astype(x.dtype), t)
-    return mhat.astype(x.dtype) * (x + s)
+    """X2 = mhat * (X + sum_j a_j T_j) over stacked terms t: (r, ..., m, n).
+
+    The combine runs at the term dtype (f32-or-better: a sub-f32 iterate's
+    terms come out of f32-accumulated factorizations) and the result is
+    cast back to the iterate dtype, so a bf16 iterate stays bf16."""
+    s = jnp.einsum("j,j...mn->...mn", a.astype(t.dtype), t)
+    return (mhat * (x + s)).astype(x.dtype)
 
 
 def _coeff_select_all(c_odd, a):
@@ -124,6 +157,12 @@ class ZoloOps(NamedTuple):
       (possibly row-distributed) iterate, for the dynamic engine's
       residual stopping rule; a sep-distributed bundle psums the local
       sum of squares.
+    * ``fnorm_pair(a, b)``        -> length-2 vector of both Frobenius
+      norms at once — the dynamic engine's residual test needs
+      ``||X1 - X0||`` and ``||X1||`` together, and a sep-distributed
+      bundle fuses both sums-of-squares into ONE all-reduce (two
+      ``fnorm`` calls would pay two collectives per iteration on the
+      convergence-check critical path).
     """
 
     gram: Callable = _gram
@@ -131,6 +170,7 @@ class ZoloOps(NamedTuple):
     gram_local: Callable = _gram
     coeff_select: Callable = _coeff_select_all
     fnorm: Callable = _norms.frobenius
+    fnorm_pair: Callable = _norms.frobenius_pair
 
 
 DEFAULT_OPS = ZoloOps()
@@ -143,18 +183,30 @@ def _chol_terms(x, c_odd, gram=None, *, ops: ZoloOps = DEFAULT_OPS):
     terms); callers combine as sum_j a_j W_j^T.
     """
     n = x.shape[-1]
-    dtype = x.dtype
-    g = ops.gram(x).astype(dtype) if gram is None else gram
-    eye = jnp.eye(n, dtype=dtype)
-    z = g[None] + c_odd[:, None, None].astype(dtype) * eye  # (r, n, n)
+    # factorizations run at f32-or-better whatever the iterate dtype:
+    # lax.linalg has no sub-f32 kernels, and a bf16 iterate's terms come
+    # out of the f32-accumulated Gram anyway
+    fdtype = jnp.promote_types(x.dtype, jnp.float32)
+    r = c_odd.shape[0]
+    if gram is None and r == 1:
+        # single-term executor (the grouped r-sharded case): fold the
+        # shift into the Gram call itself so a collective bundle carries
+        # it inside the "sep" psum (fused shifted Gram) and the
+        # kernel-/gram-side shift clamp applies
+        z = ops.gram(x, c_odd.astype(fdtype)[0])[None].astype(fdtype)
+    else:
+        g = (ops.gram(x) if gram is None else gram).astype(fdtype)
+        eye = jnp.eye(n, dtype=fdtype)
+        c_eff = _clamp_shift(c_odd.astype(fdtype), g, x.dtype)
+        z = g[None] + c_eff[:, None, None] * eye  # (r, n, n)
     l = jnp.linalg.cholesky(z)
     xt = jnp.broadcast_to(
-        jnp.swapaxes(x, -1, -2),
-        (c_odd.shape[0],) + x.shape[:-2] + (n, x.shape[-2]))
+        jnp.swapaxes(x, -1, -2).astype(fdtype),
+        (r,) + x.shape[:-2] + (n, x.shape[-2]))
     y = jax.lax.linalg.triangular_solve(l, xt, left_side=True, lower=True)
     w = jax.lax.linalg.triangular_solve(
         l, y, left_side=True, lower=True, transpose_a=True)
-    return w  # (r, n, m)
+    return w  # (r, n, m), fdtype
 
 
 def term_sum_chol(x, c_odd, a, gram=None, *, ops: ZoloOps = DEFAULT_OPS):
@@ -164,7 +216,7 @@ def term_sum_chol(x, c_odd, a, gram=None, *, ops: ZoloOps = DEFAULT_OPS):
     Kept for callers wanting the bare term; the drivers go through
     :func:`zolo_iteration`."""
     w = _chol_terms(x, c_odd, gram=gram, ops=ops)
-    return jnp.einsum("j,jnm->mn", a.astype(x.dtype), w)
+    return jnp.einsum("j,jnm->mn", a.astype(w.dtype), w).astype(x.dtype)
 
 
 def term_sum_cholqr2(x, c_odd, a, *, ops: ZoloOps = DEFAULT_OPS):
@@ -182,15 +234,25 @@ def term_sum_cholqr2(x, c_odd, a, *, ops: ZoloOps = DEFAULT_OPS):
     ``ops.gram_local`` so a sep-distributed bundle does not all-reduce
     (and thereby over-count) it."""
     n = x.shape[-1]
-    dtype = x.dtype
+    # factorizations at f32-or-better (see _chol_terms); the clamp below
+    # ridges only Z's shift — sqrt_c and the final weights keep the exact
+    # c so pass 2 still corrects to the true QR of [X; sqrt(c) I]
+    fdtype = jnp.promote_types(x.dtype, jnp.float32)
     r = c_odd.shape[0]
-    sqrt_c = jnp.sqrt(c_odd).astype(dtype)
-    eye = jnp.eye(n, dtype=dtype)
+    c_odd_f = c_odd.astype(fdtype)
+    sqrt_c = jnp.sqrt(c_odd_f)
+    eye = jnp.eye(n, dtype=fdtype)
 
-    g = ops.gram(x).astype(dtype)
-    z = g[None] + c_odd[:, None, None].astype(dtype) * eye
+    if r == 1:
+        # fused shifted Gram: the shift rides the collective (see
+        # _chol_terms); the gram implementation applies the shift clamp
+        z = ops.gram(x, c_odd_f[0])[None].astype(fdtype)
+    else:
+        g = ops.gram(x).astype(fdtype)
+        c_eff = _clamp_shift(c_odd_f, g, x.dtype)
+        z = g[None] + c_eff[:, None, None] * eye
     l1 = jnp.linalg.cholesky(z)  # R1 = L1^T
-    xb = jnp.broadcast_to(x, (r,) + x.shape)
+    xb = jnp.broadcast_to(x.astype(fdtype), (r,) + x.shape)
     # Q1 = X R1^{-1}  (right-solve against upper-triangular R1 = L1^T)
     q1 = jax.lax.linalg.triangular_solve(
         l1, xb, left_side=False, lower=True, transpose_a=True)
@@ -199,14 +261,16 @@ def term_sum_cholqr2(x, c_odd, a, *, ops: ZoloOps = DEFAULT_OPS):
         l1, jnp.broadcast_to(eye, (r, n, n)),
         left_side=False, lower=True, transpose_a=True)
     # Second pass restores orthogonality: G2 = Q^T Q = Q1^T Q1 + Q2^T Q2.
-    g2 = (ops.gram(q1) + ops.gram_local(q2)).astype(dtype)
+    # The Grams take the *iterate* dtype so a sub-f32 bundle's kernels
+    # run the production precision (no-op cast for f32/f64).
+    g2 = (ops.gram(q1.astype(x.dtype))
+          + ops.gram_local(q2.astype(x.dtype))).astype(fdtype)
     l2 = jnp.linalg.cholesky(g2)
     q1 = jax.lax.linalg.triangular_solve(
         l2, q1, left_side=False, lower=True, transpose_a=True)
     q2 = jax.lax.linalg.triangular_solve(
         l2, q2, left_side=False, lower=True, transpose_a=True)
-    return jnp.einsum("j,jmk,jnk->mn", (a / jnp.sqrt(c_odd)).astype(dtype),
-                      q1, q2)
+    return jnp.einsum("j,jmk,jnk->mn", a.astype(fdtype) / sqrt_c, q1, q2)
 
 
 def term_sum_householder(x, c_odd, a, block: int = 32, *,
@@ -219,7 +283,8 @@ def term_sum_householder(x, c_odd, a, block: int = 32, *,
     Householder QR has no kernel or sep-distributed implementation, so
     this term requires the *full* (undistributed) ``x`` — the grouped
     drivers reject it on a sep>1 mesh."""
-    dtype = x.dtype
+    dtype = jnp.promote_types(x.dtype, jnp.float32)
+    x = x.astype(dtype)  # the blocked QR has no sub-f32 path
     terms = []
     for j in range(c_odd.shape[0]):
         q1, q2 = _structured_qr_q1q2(x, jnp.sqrt(c_odd[j]).astype(dtype),
@@ -337,7 +402,11 @@ def run_dynamic(x0, l0, r: int, *, eps: float, max_iters: int = 8,
     failure the resilience layer's verdicts key on.
     """
     dtype = x0.dtype
-    tol = eps ** (1.0 / (2 * r + 1))
+    # floor the residual tolerance at a few iterate-dtype eps: a bf16
+    # iterate's step-to-step residual bottoms out near eps(bf16), below
+    # which the f32-accumulation tol (e.g. r=1) would never be met
+    tol = max(eps ** (1.0 / (2 * r + 1)),
+              4.0 * float(jnp.finfo(dtype).eps))
     hh_thresh = 10.0 * eps ** 0.5
     qr_thresh = 0.05
 
@@ -362,8 +431,8 @@ def run_dynamic(x0, l0, r: int, *, eps: float, max_iters: int = 8,
             x0)
     else:
         x1 = first(x0, first_mode)
-    res1 = ops.fnorm(x1 - x0) / jnp.maximum(
-        ops.fnorm(x1), jnp.finfo(dtype).tiny)
+    nrm1 = ops.fnorm_pair(x1 - x0, x1)  # one fused reduction for both
+    res1 = nrm1[0] / jnp.maximum(nrm1[1], jnp.finfo(dtype).tiny)
     l1 = jnp.clip(_coeffs.zolo_l_update(l0, c0, m0), 0.0, 1.0 - eps)
 
     # --- remaining iterations: shared-Gram Cholesky ------------------------
@@ -376,8 +445,8 @@ def run_dynamic(x0, l0, r: int, *, eps: float, max_iters: int = 8,
         c, av, mh = _coeffs.zolo_coeffs(l, r)
         c_sel, a_sel = ops.coeff_select(c[0::2], av)
         x_new = zolo_iteration(x, c_sel, a_sel, mh, mode="chol", ops=ops)
-        res = ops.fnorm(x_new - x) / jnp.maximum(
-            ops.fnorm(x_new), jnp.finfo(dtype).tiny)
+        nrm = ops.fnorm_pair(x_new - x, x_new)
+        res = nrm[0] / jnp.maximum(nrm[1], jnp.finfo(dtype).tiny)
         l_new = jnp.clip(_coeffs.zolo_l_update(l, c, mh), 0.0, 1.0 - eps)
         return x_new, l_new, k + 1, res, res <= tol
 
@@ -449,7 +518,11 @@ def zolo_pd(a, r: int = 3, *, alpha=None, l=None, max_iters: int = 8,
     _validate_iter_mode("first_mode", first_mode, extra=("auto",))
     ops = DEFAULT_OPS if ops is None else ops
     dtype = a.dtype
-    eps = eps or float(jnp.finfo(dtype).eps)
+    # stopping tolerance from the *accumulation* precision: a bf16
+    # iterate's factorizations and Grams accumulate in f32, and
+    # eps(bf16) ~ 8e-3 as a base tolerance would stop after one step
+    eps = eps or float(jnp.finfo(jnp.promote_types(dtype,
+                                                   jnp.float32)).eps)
     # alpha must be a guaranteed upper bound (paper: alpha assumed known/
     # estimated); the loose bound costs a few extra decades of l, which at
     # Zolotarev convergence rates is at most one extra iteration.  Callers

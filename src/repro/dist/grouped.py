@@ -39,6 +39,7 @@ is no grouped iteration math in this module.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -109,10 +110,24 @@ def _mesh_layout(a, mesh: Mesh, r: Optional[int], qr_mode: str,
     return r, nsep, has_sep, m, n, m_pad, x_spec
 
 
-def _group_ops(has_sep: bool, xw, combine_kernel) -> _zolo.ZoloOps:
+def _group_ops(has_sep: bool, xw, combine_kernel,
+               gram_kernel: bool = False) -> _zolo.ZoloOps:
     """The grouped ZoloOps composition: intra-group sep collectives
-    under the inter-group term-slice + fused combine layer."""
-    base = _gops.sep_reduce_ops() if has_sep else _zolo.DEFAULT_OPS
+    under the inter-group term-slice + fused combine layer.
+
+    ``gram_kernel=True`` swaps the local base from the jnp ops to the
+    Pallas-kernel bundle, so every Gram in the grouped path — the
+    shared/shifted iterate Gram, the CholeskyQR2 second-pass ``g2``
+    Grams (``gram(q1)`` row-sharded + ``gram_local(q2)`` replicated),
+    and the dynamic driver's sigma_min Gram — runs the tiled kernel on
+    the local block before the "sep" psum fuses in the shift."""
+    if gram_kernel:
+        from repro.core.zolo_pallas import pallas_zolo_ops
+        base = pallas_zolo_ops()
+    else:
+        base = _zolo.DEFAULT_OPS
+    if has_sep:
+        base = _gops.sep_reduce_ops(base)
     return _gops.zolo_term_group_ops(base, xw=xw,
                                      combine_kernel=combine_kernel)
 
@@ -124,11 +139,18 @@ def _default_combine_kernel(dtype) -> bool:
             and jnp.dtype(dtype).itemsize <= 4)
 
 
+# the gram kernel follows the same policy: compiled on TPU for f32-and-
+# narrower iterates, jnp elsewhere (interpret mode would run the kernel
+# body in Python per device on CPU meshes)
+_default_gram_kernel = _default_combine_kernel
+
+
 def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
                            r: Optional[int] = None, max_iters: int = 6,
                            qr_mode: str = "cholqr2", qr_iters: int = 1,
                            alpha=None, return_info: bool = False,
-                           schedule=None, combine_kernel=None):
+                           schedule=None, combine_kernel=None,
+                           gram_kernel=None):
     """Grouped (Alg. 3) Zolo-PD orthogonal factor of ``a`` (m >= n) —
     the (static schedule, collective ops) binding of the engine.
 
@@ -145,8 +167,11 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
     ``SvdPlan``) takes precedence over ``l0``/``max_iters`` — the plan
     builds it at plan time and this driver only lays it out over the
     mesh.  ``combine_kernel`` forces (True) or suppresses (False) the
-    Pallas grouped-combine kernel; the default (None) compiles it on TPU
-    and uses the jnp path elsewhere.  Returns Q only (or (Q, PolarInfo)
+    Pallas grouped-combine kernel, and ``gram_kernel`` does the same for
+    the Pallas gram kernel backing every local Gram (the shifted iterate
+    Gram, the CholeskyQR2 second-pass ``g2``); the defaults (None)
+    compile them on TPU for f32-and-narrower iterates and use the jnp
+    path elsewhere.  Returns Q only (or (Q, PolarInfo)
     with ``return_info=True``); form H with ``repro.core.form_h(q, a)``
     (the paper forms H the same way, after the combine).
     """
@@ -178,10 +203,14 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
         x0 = jnp.pad(x0, ((0, m_pad - m), (0, 0)))
     if combine_kernel is None:
         combine_kernel = _default_combine_kernel(a.dtype)
-    # pallas_call has no shard_map replication rule; the psum over
-    # "zolo" establishes the out_specs replication either way, so rep
-    # checking is only disabled when the kernel path actually runs
-    check_rep = not combine_kernel
+    if gram_kernel is None:
+        gram_kernel = _default_gram_kernel(a.dtype)
+    # pallas_call has no shard_map replication rule, so check_rep must be
+    # False whenever ANY Pallas kernel (combine or gram) runs in the
+    # body; the psum over "zolo" establishes the out_specs replication
+    # either way, so rep checking is only disabled when a kernel path
+    # actually runs
+    check_rep = not (combine_kernel or gram_kernel)
 
     @functools.partial(
         shard_map, mesh=mesh,
@@ -207,7 +236,7 @@ def grouped_zolo_pd_static(a, *, mesh: Mesh, l0: Optional[float] = None,
         # 1/r rescale rounding), every group adds its weighted term;
         # the engine's loop does the rest through the collective bundle
         xw = (jax.lax.axis_index("zolo") == 0).astype(coeff_dtype)
-        ops = _group_ops(has_sep, xw, combine_kernel)
+        ops = _group_ops(has_sep, xw, combine_kernel, gram_kernel)
         return _zolo.run_schedule(x, c_grp, a_grp, mh, qr_mode=qr_mode,
                                   qr_iters=qr_iters, ops=ops)
 
@@ -230,7 +259,7 @@ def grouped_zolo_pd_dynamic(a, *, mesh: Mesh, r: Optional[int] = None,
                             eps: Optional[float] = None,
                             est_iters: int = 8,
                             return_info: bool = False,
-                            combine_kernel=None):
+                            combine_kernel=None, gram_kernel=None):
     """Grouped (Alg. 3) Zolo-PD with *runtime* conditioning — the
     (dynamic schedule, collective ops) binding of the engine.
 
@@ -261,7 +290,10 @@ def grouped_zolo_pd_dynamic(a, *, mesh: Mesh, r: Optional[int] = None,
         a, mesh, r, first_mode, qr_iters=1,
         first_iter_modes=("auto",), mode_knob="first_mode")
     dtype = a.dtype
-    eps_f = eps or float(jnp.finfo(dtype).eps)
+    # accumulation-precision tolerance (see repro.core.zolo.zolo_pd):
+    # a bf16 iterate still accumulates and factorizes in f32
+    eps_f = eps or float(jnp.finfo(jnp.promote_types(dtype,
+                                                     jnp.float32)).eps)
     alpha = _norms.sigma_max_upper(a) if alpha is None else jnp.asarray(alpha)
     x0 = a / alpha.astype(dtype)
     if m_pad != m:
@@ -269,6 +301,8 @@ def grouped_zolo_pd_dynamic(a, *, mesh: Mesh, r: Optional[int] = None,
     coeff_dtype = jnp.promote_types(dtype, jnp.float32)
     if combine_kernel is None:
         combine_kernel = _default_combine_kernel(dtype)
+    if gram_kernel is None:
+        gram_kernel = _default_gram_kernel(dtype)
 
     # check_rep=False: the rep checker cannot type the fori_loop carry of
     # the in-graph sigma_min estimate (the loop runs on the post-psum —
@@ -286,7 +320,7 @@ def grouped_zolo_pd_dynamic(a, *, mesh: Mesh, r: Optional[int] = None,
                 f"{x.shape}, expected ({m_pad // nsep}, {n}) "
                 f"(m_pad={m_pad}, sep={nsep})")
         xw = (jax.lax.axis_index("zolo") == 0).astype(coeff_dtype)
-        ops = _group_ops(has_sep, xw, combine_kernel)
+        ops = _group_ops(has_sep, xw, combine_kernel, gram_kernel)
         if l is None:
             # the paper's runtime kappa estimate, distributed: partial
             # Gram + psum("sep") through the collective bundle (zero
@@ -315,7 +349,10 @@ def grouped_zolo_pd_dynamic(a, *, mesh: Mesh, r: Optional[int] = None,
 
 
 # round-number prior for the psum cost charged per word until measured;
-# benchmarks/comm_calibrate.py produces the calibrated replacement
+# benchmarks/comm_calibrate.py produces the calibrated replacement.  The
+# REPRO_COMM_FLOPS_PER_WORD environment variable overrides the prior at
+# resolution time (see grouped_iteration_flops) so a deployment can feed
+# its own calibration in without editing SvdConfig at every call site.
 DEFAULT_COMM_FLOPS_PER_WORD = 32.0
 
 
@@ -340,15 +377,21 @@ def grouped_iteration_flops(m: int, n: int, r: int, iters: int,
     path) stays honest for sep > 1 meshes.
 
     ``comm_flops_per_word=None`` resolves to the
+    ``REPRO_COMM_FLOPS_PER_WORD`` environment variable when set (a
+    deployment-wide calibration hook, read at every resolution so tests
+    can monkeypatch the environment), else to the
     ``DEFAULT_COMM_FLOPS_PER_WORD`` prior (so cost models can pass a
     caller's possibly-absent calibration straight through);
     ``benchmarks/comm_calibrate.py`` measures the actual psum cost per
-    word against the device's matmul flop rate (committed as
-    ``BENCH_comm.json``), and a calibrated value threads through
-    planning via ``SvdConfig.extra["comm_flops_per_word"]``.
+    word against the device's matmul flop rate — per compute dtype, bf16
+    included — (committed as ``BENCH_comm.json``), and a calibrated
+    value threads through planning via
+    ``SvdConfig.extra["comm_flops_per_word"]``.
     """
     if comm_flops_per_word is None:
-        comm_flops_per_word = DEFAULT_COMM_FLOPS_PER_WORD
+        env = os.environ.get("REPRO_COMM_FLOPS_PER_WORD")
+        comm_flops_per_word = (float(env) if env
+                               else DEFAULT_COMM_FLOPS_PER_WORD)
     if sep < 1:
         raise ValueError(f"sep degree must be >= 1, got {sep}")
     if gram_shared and sep != 1:

@@ -54,22 +54,31 @@ def sep_reduce_ops(base: Optional[_zolo.ZoloOps] = None,
     Must run inside a ``shard_map`` body over a mesh with that axis; the
     operand of ``gram`` is the local (m/sep, n) row block and the result
     is the *global* (n, n) shifted Gram, identical on every device of
-    the group.  ``gram_local`` stays the base implementation (replicated
-    operands such as the CholeskyQR2 identity block are never reduced),
-    and ``polar_update`` is row-local, so the base version applies to
-    the block unchanged.
+    the group.  A nonzero shift is FUSED into the collective: it is
+    one-hotted onto the axis-0 shard's partial product (where the base
+    gram — the Pallas kernel on TPU — also applies the shift clamp), so
+    the psum output already carries ``+ c I`` and no replicated epilogue
+    runs after the reduce.  ``gram_local`` stays the base implementation
+    (replicated operands such as the CholeskyQR2 identity block are
+    never reduced), and ``polar_update`` is row-local, so the base
+    version applies to the block unchanged.  ``fnorm_pair`` fuses the
+    dynamic engine's two residual norms into one length-2 psum.
     """
     base = _zolo.DEFAULT_OPS if base is None else base
 
     def gram(x, c=0.0):
-        # local partial product first, one psum, THEN the +cI shift —
-        # shifting before the reduction would add c * sep to the
-        # diagonal.
-        g = jax.lax.psum(base.gram(x, 0.0), axis)
         if isinstance(c, (int, float)) and c == 0.0:
-            return g
-        n = x.shape[-1]
-        return g + jnp.asarray(c, g.dtype) * jnp.eye(n, dtype=g.dtype)
+            return jax.lax.psum(base.gram(x, 0.0), axis)
+        # fused sep-psum shifted Gram: one-hot the shift onto the
+        # axis-0 shard's partial product so the psum output IS
+        # G + c I — no replicated post-psum +cI epilogue serializing
+        # after the collective.  (A uniform shift pre-psum would add
+        # c * sep to the diagonal; the one-hot adds it exactly once.)
+        # The base gram's shift clamp rides along on the shard that
+        # carries c.
+        c_arr = jnp.asarray(c)
+        w = (jax.lax.axis_index(axis) == 0).astype(c_arr.dtype)
+        return jax.lax.psum(base.gram(x, w * c_arr), axis)
 
     def fnorm(x):
         # global Frobenius norm of the row-sharded iterate: local sum of
@@ -77,7 +86,16 @@ def sep_reduce_ops(base: Optional[_zolo.ZoloOps] = None,
         # every group computes the identical value, no reduction.)
         return jnp.sqrt(jax.lax.psum(jnp.sum(jnp.abs(x) ** 2), axis))
 
-    return base._replace(gram=gram, fnorm=fnorm)
+    def fnorm_pair(a, b):
+        # both residual-rule norms in ONE all-reduce: stack the two
+        # local sums-of-squares and psum the length-2 vector (two
+        # fnorm calls would cost two latency-bound collectives per
+        # dynamic iteration)
+        loc = jnp.stack([jnp.sum(jnp.abs(a) ** 2),
+                         jnp.sum(jnp.abs(b) ** 2)])
+        return jnp.sqrt(jax.lax.psum(loc, axis))
+
+    return base._replace(gram=gram, fnorm=fnorm, fnorm_pair=fnorm_pair)
 
 
 def zolo_term_group_ops(base: Optional[_zolo.ZoloOps] = None,

@@ -21,6 +21,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Online-softmax state and both dots accumulate in f32 for any q/k/v
+# dtype; conditioning envelope (not kappa-sensitive, listed for the
+# kernel-accum-envelope lint): repro.core.svd.PALLAS_KAPPA_ENVELOPE.
+FLASH_ACCUM_DTYPE = jnp.float32
+FLASH_KAPPA_ENVELOPE = "repro.core.svd:PALLAS_KAPPA_ENVELOPE"
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   scale: float, bq: int, bk: int, n_k: int):

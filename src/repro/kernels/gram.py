@@ -20,6 +20,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Accumulation dtype of every dot in this kernel; sub-f32 inputs (bf16)
+# are legal because the MXU widens to this before summing.  The
+# conditioning envelope that pairs with it lives in
+# ``repro.core.svd.PALLAS_KAPPA_ENVELOPE`` keyed by (input, accum) dtype.
+GRAM_ACCUM_DTYPE = jnp.float32
+GRAM_KAPPA_ENVELOPE = "repro.core.svd:PALLAS_KAPPA_ENVELOPE"
+
+# In-kernel shift clamp: a *positive* Gram shift c is ridged up to at
+# least SHIFT_RIDGE_FACTOR * eps(accum) * max diag(G).  At kappa >~ 1e4
+# the odd Zolotarev coefficients underflow past the accumulated Gram's
+# eps-level negative eigenvalues, Z = G + cI goes indefinite, and the
+# downstream Cholesky emits NaN (ROADMAP 4a).  Ridging by an
+# eps-of-the-accumulator multiple is below the Gram's own rounding error,
+# so clean solves are unperturbed; c == 0 (unshifted Grams: CholeskyQR2's
+# G2, the sigma_min estimate) is never touched.
+SHIFT_RIDGE_FACTOR = 8.0
+
 
 def _gram_kernel(a1_ref, a2_ref, c_ref, out_ref, *, n_k: int, bn: int):
     i = pl.program_id(0)
@@ -41,7 +58,15 @@ def _gram_kernel(a1_ref, a2_ref, c_ref, out_ref, *, n_k: int, bn: int):
         rows = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)
         cols = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)
         eye = (rows == cols).astype(out_ref.dtype)
-        out_ref[...] += c_ref[0] * eye
+        c = c_ref[0]
+        # shift clamp: ridge a positive shift against the accumulator's
+        # eps so Z = G + cI stays definite (see SHIFT_RIDGE_FACTOR)
+        diag_max = jnp.max(out_ref[...] * eye)
+        floor = (SHIFT_RIDGE_FACTOR
+                 * jnp.finfo(GRAM_ACCUM_DTYPE).eps
+                 * jnp.maximum(diag_max, 0.0))
+        c_eff = jnp.where(c > 0.0, jnp.maximum(c, floor), c)
+        out_ref[...] += c_eff * eye
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))

@@ -27,6 +27,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# The combine accumulates in f32 whatever the iterate dtype; the paired
+# conditioning envelope is ``repro.core.svd.PALLAS_KAPPA_ENVELOPE``.
+COMBINE_ACCUM_DTYPE = jnp.float32
+COMBINE_KAPPA_ENVELOPE = "repro.core.svd:PALLAS_KAPPA_ENVELOPE"
+
 
 def _grouped_combine_kernel(x_ref, t_ref, a_ref, s_ref, out_ref, *, r: int):
     # s = [mhat, xw]: the epilogue scale and this group's X weight

@@ -13,6 +13,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# f32 accumulation for any input dtype (bf16 included); the paired
+# conditioning envelope is ``repro.core.svd.PALLAS_KAPPA_ENVELOPE``.
+MATMUL_ACCUM_DTYPE = jnp.float32
+MATMUL_KAPPA_ENVELOPE = "repro.core.svd:PALLAS_KAPPA_ENVELOPE"
+
 
 def _matmul_kernel(a_ref, b_ref, alpha_ref, out_ref, *, n_k: int):
     k = pl.program_id(2)  # i, j unused: output block fixed by (0, 1)

@@ -36,6 +36,18 @@ def _pad_to(x, mult_rows, mult_cols):
     return x, (m, n)
 
 
+def _tile_align(dtype) -> int:
+    """Minimum MXU lane-tile alignment for ``dtype``.
+
+    TPU register tiles hold 32 bits per lane slot, so sub-f32 dtypes pack
+    more elements per (8, 128) native tile: f32/f64 align at 128 lanes,
+    bf16/f16 at 256, int8/fp8 at 512.  Using a flat 128 for bf16 made
+    ``_pick_tile`` hand back 128-lane tiles the Mosaic lowering rejects,
+    and the wrappers silently fell through to the jnp oracle."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return 128 * max(1, 4 // itemsize)
+
+
 def _pick_tile(dim: int, target: int, align: int = 128) -> int:
     """Largest align-multiple tile <= target that divides dim after
     align-padding.
@@ -59,8 +71,9 @@ def gram(a, c=0.0, *, bn: int = 256, bk: int = 512, use_pallas: bool = True):
     if not use_pallas:
         return ref.gram_ref(a, c)
     m, n = a.shape
-    bn = _pick_tile(n, bn)
-    bk = _pick_tile(m, bk)
+    align = _tile_align(a.dtype)
+    bn = _pick_tile(n, bn, align)
+    bk = _pick_tile(m, bk, align)
     a_p, _ = _pad_to(a, bk, bn)
     g = gram_kernel_call(a_p, c, bn=bn, bk=bk, interpret=_interpret())
     return g[:n, :n]
@@ -73,9 +86,10 @@ def matmul(a, b, alpha=1.0, *, bm: int = 256, bn: int = 256, bk: int = 512,
         return ref.matmul_ref(a, b, alpha)
     m, k = a.shape
     _, n = b.shape
-    bm = _pick_tile(m, bm)
-    bn = _pick_tile(n, bn)
-    bk = _pick_tile(k, bk)
+    align = max(_tile_align(a.dtype), _tile_align(b.dtype))
+    bm = _pick_tile(m, bm, align)
+    bn = _pick_tile(n, bn, align)
+    bk = _pick_tile(k, bk, align)
     a_p, _ = _pad_to(a, bm, bk)
     b_p, _ = _pad_to(b, bk, bn)
     c = matmul_kernel_call(a_p, b_p, alpha, bm=bm, bn=bn, bk=bk,
@@ -89,8 +103,9 @@ def polar_update(x, t, a, mhat, *, bm: int = 256, bn: int = 256,
     if not use_pallas:
         return ref.polar_update_ref(x, t, a, mhat)
     m, n = x.shape
-    bm = _pick_tile(m, bm)
-    bn = _pick_tile(n, bn)
+    align = max(_tile_align(x.dtype), _tile_align(t.dtype))
+    bm = _pick_tile(m, bm, align)
+    bn = _pick_tile(n, bn, align)
     x_p, _ = _pad_to(x, bm, bn)
     t_p, _ = _pad_to(t, bm, bn)
     out = polar_update_kernel_call(x_p, t_p, a, mhat, bm=bm, bn=bn,
@@ -116,8 +131,9 @@ def grouped_combine(x, t, a, mhat, xw=1.0, *, bm: int = 256, bn: int = 256,
     if not use_pallas:
         return ref.grouped_combine_ref(x, t, a, mhat, xw)
     m, n = x.shape
-    bm = _pick_tile(m, bm)
-    bn = _pick_tile(n, bn)
+    align = max(_tile_align(x.dtype), _tile_align(t.dtype))
+    bm = _pick_tile(m, bm, align)
+    bn = _pick_tile(n, bn, align)
     x_p, _ = _pad_to(x, bm, bn)
     t_p, _ = _pad_to(t, bm, bn)
     out = grouped_combine_kernel_call(x_p, t_p, a, mhat, xw, bm=bm, bn=bn,

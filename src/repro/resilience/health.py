@@ -89,8 +89,14 @@ def default_orth_tol(dtype) -> float:
     A healthy Zolo/QDWH solve lands at a small multiple of eps (paper
     Tables 5/10: OrthL within ~10 eps); a broken one is off by many
     orders.  1e4 * eps splits the two regimes with wide margin on both
-    sides (f64 ~2e-12, f32 ~1e-3)."""
-    return 1.0e4 * float(jnp.finfo(jnp.dtype(dtype)).eps)
+    sides (f64 ~2e-12, f32 ~1e-3).  Sub-f32 dtypes need a far tighter
+    multiplier: 1e4 * eps(bf16) = 78 would accept anything, while a
+    healthy bf16 solve (f32 accumulation, factors rounded to bf16)
+    measures orth ~ 1-2 eps(bf16) and a broken one >= O(1), so 8 * eps
+    (~0.06 for bf16) splits those regimes."""
+    d = jnp.dtype(dtype)
+    mult = 1.0e4 if d.itemsize >= 4 else 8.0
+    return mult * float(jnp.finfo(d).eps)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,8 +157,10 @@ def judge_plan(plan, health: SolveHealth, *,
     The orthogonality tolerance comes from the precision the solve
     actually computed in (``compute_dtype`` when set, the plan dtype
     otherwise), and the conditioning envelope from the backend's
-    registry spec (``kappa_max_f32``) whenever that compute precision
-    is below f64 — the registry flag drives the check, never the
+    registry spec resolved per compute dtype
+    (:func:`repro.core.registry.envelope_kappa_max`: the
+    ``kappa_envelope`` table entry for sub-f32 inputs, ``kappa_max_f32``
+    for f32, nothing for f64) — the registry drives the check, never the
     backend's name.
     """
     compute = plan.config.compute_dtype
@@ -161,5 +169,5 @@ def judge_plan(plan, health: SolveHealth, *,
     if orth_tol is None:
         orth_tol = default_orth_tol(dtype)
     spec = _registry.get_polar(plan.method)
-    kappa_max = spec.kappa_max_f32 if dtype.itemsize < 8 else None
+    kappa_max = _registry.envelope_kappa_max(spec, dtype)
     return judge(health, orth_tol=orth_tol, kappa_max=kappa_max)

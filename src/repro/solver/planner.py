@@ -145,6 +145,11 @@ class PlanResolution:
     # grouped (Alg. 3) mesh factorization ndev = r * sep: the intra-group
     # distribution degree (size of the mesh's "sep" axis; 1 otherwise)
     sep: int = 1
+    # the config's compute_dtype resolved to a jnp.dtype (None: compute
+    # in the plan dtype).  plan_fns that gate on precision — e.g. the
+    # Pallas envelope check — must key on this, not ``dtype``: it names
+    # the precision the kernels actually see.
+    compute_dtype: Any = None
 
 
 # config knobs routed through plan_fn, and the output keys that count as
@@ -344,12 +349,19 @@ def _resolve(config: SvdConfig, shape, dtype, mesh):
     # benchmarks/comm_calibrate.py), not a backend kwarg: it is consumed
     # here, at scoring time, and never reaches the driver
     comm_word = dict(config.extra).get("comm_flops_per_word")
+    # scoring (and envelope) precision is the one the backend computes
+    # in: compute_dtype when the config sets one, the plan dtype
+    # otherwise — a bf16 compute plan over f32 inputs must be priced
+    # (and envelope-capped) as bf16
+    compute_dtype = (jnp.dtype(config.compute_dtype)
+                     if config.compute_dtype is not None else None)
+    score_dtype = compute_dtype if compute_dtype is not None else dtype
     if explicit is not None:
         spec = explicit
     else:
         spec = _select_method(mode, m, n,
                               r or _coeffs.choose_r(kappa_eff), kappa_eff,
-                              dtype=dtype, sep=sep,
+                              dtype=score_dtype, sep=sep,
                               runtime_l0=(config.l0_policy == "runtime"),
                               comm_flops_per_word=comm_word)
     _validate_capability(spec, mode, config, mesh_bound=(mesh is not None))
@@ -359,7 +371,8 @@ def _resolve(config: SvdConfig, shape, dtype, mesh):
                          r=r, l0=l0, kappa=kappa,
                          max_iters=config.max_iters,
                          qr_mode=config.qr_mode, qr_iters=config.qr_iters,
-                         nb=config.nb, sep=sep)
+                         nb=config.nb, sep=sep,
+                         compute_dtype=compute_dtype)
 
     # --- static kwargs -------------------------------------------------
     # extras pass through verbatim (a kwarg a backend does not accept
@@ -465,9 +478,11 @@ class SvdPlan:
         comm_word = dict(self.config.extra).get("comm_flops_per_word")
         comm_kw = ({} if comm_word is None
                    else {"comm_flops_per_word": comm_word})
+        score_dtype = (res.compute_dtype if res.compute_dtype is not None
+                       else res.dtype)
         flops = float(self._spec.flops_fn(res.m, res.n, r=r, kappa=kappa,
                                           grouped=grouped,
-                                          dtype=res.dtype, sep=res.sep,
+                                          dtype=score_dtype, sep=res.sep,
                                           **comm_kw))
         return flops / max(r, 1) if grouped else flops
 
@@ -561,6 +576,10 @@ class SvdPlan:
     def _svd_impl_info(self, a, extra=None):
         q, h, info, transposed, alpha, out_dtype = \
             self._polar_canonical(a, True, extra)
+        # lax.linalg has no sub-f32 eigensolver kernels: a bf16 compute
+        # plan hands H to the eig stage at the accumulation precision
+        # (no-op for f32/f64 — promote_types is the identity there)
+        h = h.astype(jnp.promote_types(h.dtype, jnp.float32))
         w, v = self._eig_spec.fn(h, **self._eig_kwargs)
         u = jnp.einsum("...mk,...kn->...mn", q, v)
         # ascending -> descending; fold any tiny negative eigenvalue's

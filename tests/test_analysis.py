@@ -36,7 +36,8 @@ def lint(tmp_path, source, rule, baseline=None):
 def test_rule_registry_complete():
     assert set(all_rules()) == {
         "collective-axis", "accum-dtype", "plan-key-hygiene",
-        "retrace-hazard", "bare-assert", "keyerror-dispatch"}
+        "retrace-hazard", "bare-assert", "keyerror-dispatch",
+        "kernel-accum-envelope"}
     for rule in all_rules().values():
         assert rule.doc  # every rule documents its bug class
 
@@ -298,13 +299,15 @@ def test_expected_psum_model():
         "zolo_grouped", {"schedule": (0.0,) * 3, "qr_mode": "householder"})
     assert hh == {"sep": 2, "zolo": 3}
     # dynamic: in-graph estimate + peeled 3-branch first iter + residuals
+    # (each residual is ONE fused fnorm_pair psum — two norms ride a
+    # single length-2 all-reduce; body = 1 Gram + 1 fnorm_pair)
     dy = JA.expected_grouped_psums(
         "zolo_grouped_dynamic", {"first_mode": "auto"}, sep=1)
-    assert dy == {"sep": 9, "zolo": 4}
+    assert dy == {"sep": 7, "zolo": 4}
     # pinned l skips the estimate Gram; sep>1 swaps householder out
     dy2 = JA.expected_grouped_psums(
         "zolo_grouped_dynamic", {"first_mode": "auto", "l": 1e-3}, sep=4)
-    assert dy2 == {"sep": 10, "zolo": 4}
+    assert dy2 == {"sep": 8, "zolo": 4}
     assert JA.expected_grouped_psums("zolo_static", {}) is None
 
 

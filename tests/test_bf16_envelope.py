@@ -1,0 +1,250 @@
+"""The bf16 kernel envelope (ROADMAP item 4): shift clamp, envelope
+table, planner gating, and the runtime health judge.
+
+Four contracts, one per section:
+
+* the kernel-side shift clamp keeps the f32 Pallas path finite and
+  orth-clean in the former NaN regime (kappa 2e4-3e4 and beyond);
+* bf16-input kernels return finite, orth-clean factors up to the
+  recorded ``("bfloat16", "float32")`` envelope entry;
+* ``method="auto"`` (and explicit plans) never run a Pallas backend
+  outside its compute dtype's envelope — priced to infinity in scoring,
+  ValueError in plan_fn;
+* ``judge_plan`` fires exactly at the envelope breach for bf16 compute
+  plans, through the same registry table.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as C
+import repro.solver as S
+from repro.core import registry
+from repro.core import zolo as Z
+from repro.core.svd import (PALLAS_BF16_KAPPA_MAX, PALLAS_F32_KAPPA_MAX,
+                            PALLAS_KAPPA_ENVELOPE, _zolo_pallas_flops)
+from repro.core.zolo_pallas import zolo_pd_pallas
+from repro.kernels import ops, ref
+from repro.resilience import health as H
+
+from conftest import make_matrix
+
+
+# --- shift clamp (ROADMAP 4a): the f32 indefinite-Gram fix ------------------
+
+
+def test_gram_kernel_clamps_tiny_positive_shift():
+    """A positive shift below the eps(f32)-relative floor is ridged up
+    in-kernel: the returned diagonal carries the floor, not the raw c
+    (which f32 addition would round away against a large diagonal)."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((256, 128)) * 30.0, jnp.float32)
+    g0 = ref.gram_ref(a, 0.0)
+    diag_max = float(jnp.max(jnp.diagonal(g0)))
+    floor = 8.0 * float(jnp.finfo(jnp.float32).eps) * diag_max
+    c_tiny = floor / 100.0
+
+    g = ops.gram(a, c_tiny)
+    applied = float(jnp.max(jnp.diagonal(g) - jnp.diagonal(g0)))
+    # the effective shift is the floor (within f32 rounding), not c_tiny
+    assert applied > 10.0 * c_tiny
+    assert applied == pytest.approx(floor, rel=0.3)
+
+    # a shift already above the floor passes through unclamped
+    c_big = 10.0 * floor
+    g_big = ops.gram(a, c_big)
+    applied_big = float(jnp.max(jnp.diagonal(g_big) - jnp.diagonal(g0)))
+    assert applied_big == pytest.approx(c_big, rel=0.1)
+
+    # c == 0 is never touched: unshifted Grams (g2, sigma_min estimates)
+    # stay exact
+    np.testing.assert_allclose(np.asarray(ops.gram(a, 0.0)),
+                               np.asarray(g0), rtol=1e-5)
+
+
+def test_engine_clamp_leaves_f64_shifts_alone():
+    """f64 iterates never clamp: Zolotarev shifts ~1e-20 at kappa 1e10
+    are real and must reach the factorization unmodified."""
+    g = jnp.eye(8, dtype=jnp.float64) * 3.0
+    c = jnp.asarray([1e-20], jnp.float64)
+    out = Z._clamp_shift(c, g, jnp.float64)
+    assert float(out[0]) == 1e-20
+
+
+@pytest.mark.parametrize("kappa", [2.0e4, 3.0e4])
+def test_f32_pallas_static_finite_in_former_nan_regime(kappa):
+    """Before the clamp, kappa >= 3e4 sent the f32 shifted Gram
+    indefinite and Cholesky returned NaN (the measured ROADMAP 4a edge,
+    with 2e4 the last clean decade).  With the in-kernel ridge the same
+    path stays finite and orthogonal through and past the old edge."""
+    n = 128
+    a = make_matrix(2 * n, n, kappa, dtype=jnp.float32, seed=5)
+    q, _, info = zolo_pd_pallas(a, l0=0.9 / kappa)
+    assert bool(jnp.all(jnp.isfinite(q)))
+    assert float(C.orthogonality(q)) < 1e-5
+
+
+# --- the bf16 envelope: accuracy inside, recorded table ----------------------
+
+
+def test_envelope_table_entries():
+    assert PALLAS_KAPPA_ENVELOPE[("float32", "float32")] \
+        == PALLAS_F32_KAPPA_MAX
+    assert PALLAS_KAPPA_ENVELOPE[("bfloat16", "float32")] \
+        == PALLAS_BF16_KAPPA_MAX
+    # fail-closed consistency: no sub-f32 entry may exceed the f32 cap
+    assert PALLAS_BF16_KAPPA_MAX <= PALLAS_F32_KAPPA_MAX
+    for spec_name in ("zolo_pallas", "zolo_pallas_dynamic"):
+        spec = registry.get_polar(spec_name)
+        assert spec.kappa_envelope == PALLAS_KAPPA_ENVELOPE
+
+
+def test_envelope_resolution_per_dtype():
+    spec = registry.get_polar("zolo_pallas")
+    assert registry.envelope_kappa_max(spec, jnp.dtype(jnp.float64)) is None
+    assert registry.envelope_kappa_max(spec, jnp.dtype(jnp.float32)) \
+        == PALLAS_F32_KAPPA_MAX
+    assert registry.envelope_kappa_max(spec, jnp.dtype(jnp.bfloat16)) \
+        == PALLAS_BF16_KAPPA_MAX
+    # an unmeasured narrow dtype fails closed to the table minimum
+    assert registry.envelope_kappa_max(spec, jnp.dtype(jnp.float16)) \
+        == min(PALLAS_KAPPA_ENVELOPE.values())
+
+
+@pytest.mark.parametrize("kappa", [1.0e2, 1.0e3, PALLAS_BF16_KAPPA_MAX])
+def test_bf16_kernels_accurate_inside_envelope(kappa):
+    """bf16-input kernels (f32 accumulation + shift clamp) return
+    finite, orth-clean factors through the recorded envelope cap."""
+    n = 128
+    a32 = make_matrix(2 * n, n, kappa, dtype=jnp.float32, seed=7)
+    a = a32.astype(jnp.bfloat16)
+    q, _, info = zolo_pd_pallas(a, l0=0.9 / kappa)
+    assert q.dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(q.astype(jnp.float32))))
+    orth = float(C.orthogonality(q.astype(jnp.float32)))
+    assert orth < H.default_orth_tol(jnp.bfloat16)
+    # healthy bf16 solves measure orth ~ a few eps(bf16), far inside
+    # the acceptance threshold — catch silent degradation early
+    assert orth < 1.0e-2
+
+
+def test_bf16_compute_plan_end_to_end_inside_envelope():
+    """An SvdPlan with compute_dtype='bfloat16' over f32 inputs solves
+    through the Pallas backend and passes its own health judgment."""
+    kappa = 1.0e3
+    n = 96
+    a = make_matrix(2 * n, n, kappa, dtype=jnp.float32, seed=11)
+    p = S.plan(S.SvdConfig(method="zolo_pallas", kappa=kappa,
+                           l0_policy="estimate_at_plan",
+                           compute_dtype="bfloat16"),
+               a.shape, a.dtype)
+    u, s, vh, health = p.svd_verified(a)
+    assert u.dtype == jnp.float32  # results come back in the plan dtype
+    verdict = H.judge_plan(p, health)
+    assert verdict.ok, verdict.reasons
+    s0 = np.linalg.svd(np.asarray(a, np.float64), compute_uv=False)
+    # bf16 compute: top singular values to ~eps(bf16) relative accuracy
+    np.testing.assert_allclose(np.asarray(s)[: n // 2], s0[: n // 2],
+                               rtol=5e-2)
+
+
+# --- planner gating: never outside the envelope ------------------------------
+
+
+def test_bf16_plan_raises_beyond_bf16_cap_inside_f32_cap():
+    """The per-dtype table, not the flat f32 cap, gates plan_fn: a
+    kappa between the bf16 and f32 caps plans at f32 but raises at
+    bf16 compute."""
+    kappa = 1.5e4
+    assert PALLAS_BF16_KAPPA_MAX < kappa < PALLAS_F32_KAPPA_MAX
+    cfg = dict(method="zolo_pallas", kappa=kappa,
+               l0_policy="estimate_at_plan")
+    p32 = S.plan(S.SvdConfig(**cfg), (128, 128), jnp.float32)
+    assert p32.method == "zolo_pallas"
+    with pytest.raises(ValueError, match="NaN envelope"):
+        S.plan(S.SvdConfig(compute_dtype="bfloat16", **cfg),
+               (128, 128), jnp.float32)
+
+
+def test_auto_never_selects_bf16_pallas_outside_envelope(monkeypatch):
+    """Acceptance: method='auto' must not pick a Pallas backend whose
+    compute dtype sits beyond its recorded envelope — even on TPU,
+    where the kernels otherwise win on the fused-pass + bf16-rate
+    discounts.  Simulated by faking the backend so the scoring branch
+    under test (the TPU discounts) is the one that runs."""
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    S.clear_plan_cache()
+    inside = 0.9 * PALLAS_BF16_KAPPA_MAX
+    between = 1.5e4  # beyond bf16's cap, inside f32's
+
+    # scoring: infinity outside the envelope, discounted inside
+    flops_kw = dict(r=2, grouped=False)
+    assert math.isinf(_zolo_pallas_flops(256, 128, kappa=between,
+                                         dtype=jnp.dtype(jnp.bfloat16),
+                                         **flops_kw))
+    assert math.isfinite(_zolo_pallas_flops(256, 128, kappa=between,
+                                            dtype=jnp.dtype(jnp.float32),
+                                            **flops_kw))
+    assert math.isfinite(_zolo_pallas_flops(256, 128, kappa=inside,
+                                            dtype=jnp.dtype(jnp.bfloat16),
+                                            **flops_kw))
+
+    # end-to-end resolution: inside the envelope auto takes the kernel
+    # path, outside it falls back to a non-Pallas backend (never an
+    # error, never a Pallas pick)
+    p_in = S.plan(S.SvdConfig(kappa=inside, l0_policy="estimate_at_plan",
+                              compute_dtype="bfloat16"),
+                  (256, 128), jnp.float32)
+    assert p_in.method == "zolo_pallas"
+    p_out = S.plan(S.SvdConfig(kappa=between,
+                               l0_policy="estimate_at_plan",
+                               compute_dtype="bfloat16"),
+                   (256, 128), jnp.float32)
+    assert "pallas" not in p_out.method
+    # the same kappa at f32 compute is still inside f32's envelope
+    p_f32 = S.plan(S.SvdConfig(kappa=between,
+                               l0_policy="estimate_at_plan"),
+                   (256, 128), jnp.float32)
+    assert p_f32.method == "zolo_pallas"
+    S.clear_plan_cache()
+
+
+# --- runtime health: judge_plan fires exactly at the breach ------------------
+
+
+def _health(kappa_est, orth=1e-4):
+    return H.SolveHealth(finite=jnp.asarray(True),
+                         orth=jnp.asarray(orth, jnp.float32),
+                         converged=jnp.asarray(True),
+                         kappa_est=jnp.asarray(kappa_est, jnp.float32))
+
+
+def test_judge_plan_bf16_envelope_breach_exact():
+    """A dynamic bf16 compute plan has no plan-time kappa, so the
+    runtime estimate is the only envelope gate: at the cap the verdict
+    holds, just beyond it the envelope reason fires."""
+    p = S.plan(S.SvdConfig(method="zolo_pallas_dynamic",
+                           compute_dtype="bfloat16"),
+               (128, 128), jnp.float32)
+    at_cap = H.judge_plan(p, _health(PALLAS_BF16_KAPPA_MAX))
+    assert at_cap.ok, at_cap.reasons
+    assert at_cap.kappa_max == PALLAS_BF16_KAPPA_MAX
+    beyond = H.judge_plan(p, _health(1.02 * PALLAS_BF16_KAPPA_MAX))
+    assert not beyond.ok
+    assert any("envelope" in r for r in beyond.reasons)
+    # the same runtime estimate under f32 compute is inside f32's cap
+    p32 = S.plan(S.SvdConfig(method="zolo_pallas_dynamic"),
+                 (128, 128), jnp.float32)
+    v32 = H.judge_plan(p32, _health(1.02 * PALLAS_BF16_KAPPA_MAX))
+    assert v32.ok, v32.reasons
+
+
+def test_bf16_orth_tol_splits_healthy_from_broken():
+    tol = H.default_orth_tol(jnp.bfloat16)
+    # healthy bf16 solves measure a few eps(bf16); broken ones O(1)
+    assert 1e-2 < tol < 0.5
